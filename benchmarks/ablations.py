@@ -1,0 +1,47 @@
+"""Paper Mini-Experiments 1, 2, 4: LP-vs-ILP shading, Neighbor Sampling
+vs random sampling, Dual Reducer auxiliary LP vs random sampling."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ILP_KW, build_engine, emit, gap, query_for, timed
+
+
+def run(full: bool = False):
+    hardnesses = (1, 5, 9) if not full else (1, 3, 5, 7, 9, 11, 13)
+    n = 15_000
+    eng = build_engine("sdss", n)
+    eng.partition()
+
+    # Mini-Exp 1: LP vs ILP for the intermediate Shading solve
+    for h in hardnesses:
+        q = query_for(eng, "Q1_SDSS", h)
+        lp = eng.lp_bound(q)
+        a, ta = timed(eng.solve, q, ilp_kwargs=ILP_KW, layer_solver="lp")
+        b, tb = timed(eng.solve, q, ilp_kwargs=ILP_KW, layer_solver="ilp")
+        emit(f"miniexp1/shading_lp/h{h}", ta * 1e6,
+             f"feasible={a.feasible};gap={gap(a, lp):.4f}")
+        emit(f"miniexp1/shading_ilp/h{h}", tb * 1e6,
+             f"feasible={b.feasible};gap={gap(b, lp):.4f}")
+
+    # Mini-Exp 2: Neighbor Sampling vs random sampling
+    for h in hardnesses:
+        q = query_for(eng, "Q1_SDSS", h)
+        lp = eng.lp_bound(q)
+        a, _ = timed(eng.solve, q, ilp_kwargs=ILP_KW, sampler="neighbor")
+        b, _ = timed(eng.solve, q, ilp_kwargs=ILP_KW, sampler="random")
+        emit(f"miniexp2/neighbor/h{h}", 0.0,
+             f"feasible={a.feasible};obj={a.obj:.3f};gap={gap(a, lp):.4f}")
+        emit(f"miniexp2/random/h{h}", 0.0,
+             f"feasible={b.feasible};obj={b.obj:.3f};gap={gap(b, lp):.4f}")
+
+    # Mini-Exp 4: Dual Reducer auxiliary LP vs random sub-ILP sampling
+    for h in hardnesses:
+        q = query_for(eng, "Q1_SDSS", h)
+        lp = eng.lp_bound(q)
+        a, _ = timed(eng.solve, q, ilp_kwargs=ILP_KW, dr_aux="lp")
+        b, _ = timed(eng.solve, q, ilp_kwargs=ILP_KW, dr_aux="random")
+        emit(f"miniexp4/aux_lp/h{h}", 0.0,
+             f"feasible={a.feasible};gap={gap(a, lp):.4f}")
+        emit(f"miniexp4/aux_random/h{h}", 0.0,
+             f"feasible={b.feasible};gap={gap(b, lp):.4f}")

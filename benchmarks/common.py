@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: timing, CSV emission, engines."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.core.engine import PackageQueryEngine
+from repro.core.hardness import TEMPLATES, column_stats, instantiate
+from repro.data.synth_tables import make_table, subsample
+
+ROWS: List[str] = []
+
+ILP_KW = dict(max_nodes=250, time_limit_s=20)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0)
+
+
+def build_engine(kind: str, n: int, *, d_f: int = 20, alpha: int = 2000,
+                 seed: int = 0) -> PackageQueryEngine:
+    table = make_table(kind, n, seed=seed)
+    attrs = (["tmass_prox", "j", "h", "k"] if kind == "sdss"
+             else ["price", "quantity", "discount", "tax"])
+    eng = PackageQueryEngine(table, attrs, d_f=d_f, alpha=alpha, seed=seed)
+    return eng
+
+
+def query_for(eng: PackageQueryEngine, template_name: str, h: float):
+    stats = column_stats(eng.table, eng.attrs)
+    return instantiate(TEMPLATES[template_name], stats, h)
+
+
+def gap(res, lp_bound: float) -> float:
+    """Paper integrality-gap metric, normalised >= 1."""
+    if not res.feasible or not np.isfinite(lp_bound):
+        return float("nan")
+    g = (abs(res.obj) + 0.1) / (abs(lp_bound) + 0.1)
+    return g if g >= 1 else 1.0 / g

@@ -1,0 +1,37 @@
+"""Paper Mini-Experiments 7 and 8: sub-ILP size q sweep, and Dual Reducer
+vs direct black-box ILP for the final layer."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ILP_KW, build_engine, emit, gap, query_for, timed
+from repro.core.dual_reducer import dual_reducer
+
+
+def run(full: bool = False):
+    n = 20_000
+    eng = build_engine("sdss", n)
+    eng.partition()
+    hardnesses = (1, 5, 9) if not full else (1, 3, 5, 7, 9, 11, 13)
+
+    # Mini-Exp 7: q sweep
+    for qsize in (50, 500, 5000):
+        for h in hardnesses:
+            q = query_for(eng, "Q1_SDSS", h)
+            res, t = timed(dual_reducer, q, eng.table, np.arange(n),
+                           q=qsize, ilp_kwargs=ILP_KW)
+            emit(f"miniexp7/q{qsize}/h{h}", t * 1e6,
+                 f"feasible={res.feasible};sub_ilp={res.sub_ilp_size};"
+                 f"fallbacks={res.fallbacks}")
+
+    # Mini-Exp 8: Dual Reducer vs direct ILP on the final candidate set
+    for h in hardnesses:
+        q = query_for(eng, "Q1_SDSS", h)
+        lp = eng.lp_bound(q)
+        dr, t_dr = timed(dual_reducer, q, eng.table, np.arange(n), q=500,
+                         ilp_kwargs=ILP_KW)
+        bb, t_bb = timed(eng.solve_direct, q, ILP_KW)
+        emit(f"miniexp8/dual_reducer/h{h}", t_dr * 1e6,
+             f"feasible={dr.feasible};gap={gap(dr, lp):.4f}")
+        emit(f"miniexp8/direct_ilp/h{h}", t_bb * 1e6,
+             f"feasible={bb.feasible};gap={gap(bb, lp):.4f}")

@@ -1,0 +1,40 @@
+"""Paper Fig. 9 (+ App. F.1 Fig. 11): false infeasibility as hardness
+increases.  Ground truth = direct solver run in pure-feasibility mode
+(objective dropped), the paper's Gurobi protocol."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import ILP_KW, build_engine, emit, query_for, timed
+from repro.core.paql import PackageQuery
+
+
+def _feasibility_query(q: PackageQuery) -> PackageQuery:
+    return dataclasses.replace(q, objective_attr=q.objective_attr,
+                               maximize=False)
+
+
+def run(full: bool = False):
+    hardnesses = (1, 5, 9, 13) if not full else (1, 3, 5, 7, 9, 11, 13, 15)
+    trials = 3 if not full else 5
+    n = 15_000
+    for kind, tmpl in (("sdss", "Q1_SDSS"), ("tpch", "Q2_TPCH"),
+                       ("sdss", "Q3_SDSS"), ("tpch", "Q4_TPCH")):
+        for h in hardnesses:
+            truth = ps_ok = sr_ok = 0
+            t_total = 0.0
+            for trial in range(trials):
+                eng = build_engine(kind, n, seed=100 + trial)
+                eng.partition()
+                q = query_for(eng, tmpl, h)
+                gt = eng.solve_direct(_feasibility_query(q), ILP_KW)
+                truth += int(gt.feasible)
+                ps, t = timed(eng.solve, q, ilp_kwargs=ILP_KW)
+                t_total += t
+                ps_ok += int(ps.feasible)
+                sr = eng.solve_sketchrefine(q, ilp_kwargs=ILP_KW)
+                sr_ok += int(sr.feasible)
+            emit(f"fig9/{tmpl}/h{h}", t_total / trials * 1e6,
+                 f"ground_truth={truth}/{trials};ps={ps_ok};sr={sr_ok}")

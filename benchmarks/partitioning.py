@@ -1,0 +1,24 @@
+"""Paper Mini-Experiment 5: DLV vs KD-tree partitioning a large relation
+(time + achievable group counts).  Container scale: 3e5-1e6 tuples
+(paper: 1e8-1e9 on 80 cores; KD-tree OOMs at 1e9)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.dlv import dlv
+from repro.core.kdtree import kdtree_partition
+from repro.data.synth_tables import make_table
+
+
+def run(full: bool = False):
+    n = 1_000_000 if full else 300_000
+    table = make_table("tpch", n, seed=0)
+    X = np.stack([table[a] for a in
+                  ("price", "quantity", "discount", "tax")], axis=1)
+    res, t_dlv = timed(dlv, X, 100)
+    emit(f"miniexp5/dlv/n{n}", t_dlv * 1e6,
+         f"groups={res.num_groups};target={n // 100}")
+    kd, t_kd = timed(kdtree_partition, X, tau=max(2, n // 1000))
+    emit(f"miniexp5/kdtree/n{n}", t_kd * 1e6,
+         f"groups={kd.num_groups};target=1000")

@@ -1,0 +1,31 @@
+"""Paper Fig. 7: ratio score z of DLV / 1-D DLV / KD-tree at matched
+downscale factors on N(0,1), 1e5 samples."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.dlv import dlv, dlv_1d_partition, ratio_score
+from repro.core.kdtree import kdtree_partition
+
+
+def run(full: bool = False):
+    n = 100_000 if full else 30_000
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, 1))
+    vals = np.sort(X[:, 0])
+    for d_f in (10, 100, 1000):
+        res, t = timed(dlv, X, d_f)
+        z = ratio_score(X[:, 0], res.gid)
+        emit(f"fig7/dlv/df{d_f}", t * 1e6,
+             f"z={z:.3e};groups={res.num_groups}")
+        # 1-D DLV at beta targeting the same group count
+        beta = 13.5 * np.var(vals) / d_f ** 2
+        gid, _ = dlv_1d_partition(vals, beta)
+        z1 = ratio_score(vals, gid)
+        emit(f"fig7/dlv1d/df{d_f}", 0.0,
+             f"z={z1:.3e};groups={int(gid.max()) + 1}")
+        kd, t_kd = timed(kdtree_partition, X, tau=max(2, d_f))
+        z_kd = ratio_score(X[:, 0], kd.gid)
+        emit(f"fig7/kdtree/df{d_f}", t_kd * 1e6,
+             f"z={z_kd:.3e};groups={kd.num_groups}")

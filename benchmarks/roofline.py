@@ -1,0 +1,133 @@
+"""Roofline analysis from the multi-pod dry-run artifacts (§Roofline).
+
+For every (arch x shape) single-pod cell:
+    compute term    = HLO_dot_FLOPs(/dev) / peak_FLOPs(bf16, per chip)
+    memory term     = HLO_dot_bytes(/dev) / HBM bandwidth
+    collective term = collective_bytes(/dev) / ICI link bandwidth
+plus MODEL_FLOPS = 6*N(_active)*D (train) or 2*N_active*D_new (decode),
+the useful/compiled ratio, the dominant term, and a one-line lever.
+
+Writes results/roofline.csv and prints the table run.py embeds in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import emit
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+CHIPS = 256  # single-pod roofline per the brief
+
+
+def model_flops_per_device(arch: str, shape_name: str) -> float:
+    """Useful FLOPs per device per step: 6*N_active*tokens (train),
+    2*N_active*tokens (prefill), 2*N_active*B new tokens (decode)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2 * n_active * tokens
+    else:  # decode: one new token per sequence
+        total = 2 * n_active * shape.global_batch
+    return total / CHIPS
+
+
+def lever(dom: str, arch: str, shape: str) -> str:
+    cfg = get_config(arch)
+    if dom == "collective":
+        if cfg.uses_moe:
+            return ("replace replicate-and-psum MoE combine with shard_map "
+                    "all-to-all over the expert axis")
+        return "reshard FSDP gathers: batch-axis all-gather -> per-layer rs/ag overlap"
+    if dom == "memory":
+        if SHAPES[shape].kind == "decode":
+            return "decode is KV/weight-bandwidth bound: raise batch or quantize KV"
+        return "fuse attention (Pallas flash) to cut score-matrix HBM traffic"
+    if cfg.num_heads and cfg.num_heads % 16 != 0:
+        return ("attention replicated over model axis (heads %% 16 != 0): "
+                "shard head_dim or use sequence parallelism")
+    return "raise arithmetic intensity: larger per-device matmul tiles"
+
+
+def analyze(results_dir: str = "results/dryrun",
+            out_csv: str = "results/roofline.csv") -> list:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*__16x16.json"))):
+        rec = json.load(open(f))
+        if rec.get("arch") == "pq_step":
+            continue
+        if rec.get("status") != "OK":
+            if rec.get("status") == "SKIP":
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "skip": rec.get("reason", "")})
+            continue
+        flops = rec["dot_flops"]
+        mem_bytes = rec["dot_bytes"]
+        coll = rec["collectives"].get("total", 0.0)
+        t_comp = flops / PEAK_FLOPS_BF16
+        t_mem = mem_bytes / HBM_BW
+        t_coll = coll / ICI_BW
+        dom = max((("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll)), key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(rec["arch"], rec["shape"])
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops_dev": mf, "hlo_flops_dev": flops,
+            "useful_ratio": mf / flops if flops else float("nan"),
+            "roofline_frac": t_comp / max(t_comp, t_mem, t_coll)
+            if max(t_comp, t_mem, t_coll) > 0 else float("nan"),
+            "arg_gib_dev": rec["memory"].get("argument_size_in_bytes", 0) / 2**30,
+            "lever": lever(dom, rec["arch"], rec["shape"]),
+        })
+    os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    keys = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+            "dominant", "model_flops_dev", "hlo_flops_dev", "useful_ratio",
+            "roofline_frac", "arg_gib_dev", "lever"]
+    with open(out_csv, "w") as fh:
+        fh.write(",".join(keys) + "\n")
+        for r in rows:
+            if "skip" in r:
+                fh.write(f"{r['arch']},{r['shape']},SKIP: {r['skip']}\n")
+            else:
+                fh.write(",".join(
+                    f"{r[k]:.4e}" if isinstance(r[k], float) else str(r[k])
+                    for k in keys) + "\n")
+    return rows
+
+
+def run(full: bool = False):
+    rows = analyze()
+    for r in rows:
+        if "skip" in r:
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0, "SKIP")
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+             f"dom={r['dominant']};comp={r['t_compute_s']:.3e};"
+             f"mem={r['t_memory_s']:.3e};coll={r['t_collective_s']:.3e};"
+             f"useful={r['useful_ratio']:.3f}")
+    # optimized sweep (shipped §Perf changes), if present
+    if os.path.isdir("results/dryrun_opt"):
+        base = {(r.get("arch"), r.get("shape")): r for r in rows
+                if "skip" not in r}
+        for r in analyze("results/dryrun_opt", "results/roofline_opt.csv"):
+            if "skip" in r:
+                continue
+            b = base.get((r["arch"], r["shape"]))
+            bb = max(b["t_compute_s"], b["t_memory_s"],
+                     b["t_collective_s"]) if b else float("nan")
+            oo = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            emit(f"roofline_opt/{r['arch']}/{r['shape']}", oo * 1e6,
+                 f"dom={r['dominant']};speedup_vs_base="
+                 f"{bb / oo if oo else float('nan'):.2f}x")

@@ -1,0 +1,38 @@
+"""Paper Fig. 8: query performance as relation size increases —
+Progressive Shading vs SketchRefine vs direct B&B ("Gurobi" role).
+
+Container scale: 5e3 - 1e5 tuples (the paper's 1e6-1e9 on 80 cores);
+the shapes of interest are the relative curves: PS stays fast and feasible,
+SR degrades, direct ILP blows up.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ILP_KW, build_engine, emit, gap, query_for, timed
+
+
+def run(full: bool = False):
+    sizes = [5_000, 20_000, 80_000] if not full else [5_000, 20_000,
+                                                      80_000, 300_000]
+    for kind, tmpl in (("sdss", "Q1_SDSS"), ("tpch", "Q2_TPCH")):
+        for n in sizes:
+            eng = build_engine(kind, n)
+            _, t_part = timed(eng.partition)
+            emit(f"fig8/partition/{kind}/n{n}", t_part * 1e6,
+                 f"layers={[l.size for l in eng.hierarchy.layers]}")
+            for h in (1, 5):
+                q = query_for(eng, tmpl, h)
+                lp = eng.lp_bound(q)
+                ps, t_ps = timed(eng.solve, q, ilp_kwargs=ILP_KW)
+                emit(f"fig8/ps/{kind}/n{n}/h{h}", t_ps * 1e6,
+                     f"feasible={ps.feasible};gap={gap(ps, lp):.4f}")
+                if n <= 20_000:
+                    sr, t_sr = timed(eng.solve_sketchrefine, q,
+                                     ilp_kwargs=ILP_KW)
+                    emit(f"fig8/sketchrefine/{kind}/n{n}/h{h}", t_sr * 1e6,
+                         f"feasible={sr.feasible};gap={gap(sr, lp):.4f}")
+                if n <= 20_000:
+                    bb, t_bb = timed(eng.solve_direct, q, ILP_KW)
+                    emit(f"fig8/direct_ilp/{kind}/n{n}/h{h}", t_bb * 1e6,
+                         f"feasible={bb.feasible};gap={gap(bb, lp):.4f}")

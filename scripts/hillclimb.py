@@ -1,0 +1,53 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration tool: relower a cell, print the 3 roofline terms and the
+top collective contributors (the dry-run 'profile').
+
+    PYTHONPATH=src python scripts/hillclimb.py deepseek-v3-671b train_4k
+"""
+import sys
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.hlo_analysis import (collective_bytes, hlo_stats,
+                                            top_collectives)
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.specs import build_cell
+
+
+def analyze(arch: str, shape: str, save_hlo: str = ""):
+    t0 = time.time()
+    mesh = make_production_mesh()
+    with mesh:
+        cell = build_cell(arch, shape, mesh)
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums,
+                           ).lower(*cell.args).compile()
+        hlo = compiled.as_text()
+    if save_hlo:
+        open(save_hlo, "w").write(hlo)
+    st = hlo_stats(hlo)
+    coll = collective_bytes(hlo)
+    t_comp = st.flops / PEAK_FLOPS_BF16
+    t_mem = st.dot_bytes / HBM_BW
+    t_coll = coll.total_bytes / ICI_BW
+    print(f"== {arch} {shape}  (compile {time.time()-t0:.0f}s)")
+    print(f"   compute {t_comp:.3f}s | memory {t_mem:.3f}s | "
+          f"collective {t_coll:.3f}s   flops/dev={st.flops:.3e}")
+    print(f"   collective bytes by kind: "
+          + ", ".join(f"{k}={v:.2e}" for k, v in coll.bytes_by_kind.items()))
+    print("   top collectives (kind, weighted bytes/dev, type, count):")
+    for kind, b, ty, cnt in top_collectives(hlo):
+        print(f"     {kind:20s} {b:.3e}  {ty[:64]:64s} x{cnt}")
+    return t_comp, t_mem, t_coll
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "deepseek-v3-671b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    save = sys.argv[3] if len(sys.argv) > 3 else ""
+    analyze(arch, shape, save)

@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` resolves through here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_applicable
+
+_ARCH_MODULES = {
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube_3_4b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "whisper-base": "repro.configs.whisper_base",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id.endswith("-smoke"):
+        return get_config(arch_id[: -len("-smoke")]).smoke()
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "ARCH_IDS",
+    "get_config", "all_configs", "shape_applicable",
+]

@@ -1,0 +1,15 @@
+# The paper's primary contribution: Progressive Shading package-query
+# processing with DLV partitioning, Dual Reducer and (Parallel) Dual Simplex.
+#
+# LP/ILP numerics require f64; jax x64 mode is enabled at core import time.
+# Model code elsewhere uses explicit dtypes so this is safe process-wide.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.paql import PackageQuery, Constraint  # noqa: E402
+from repro.core.lp import solve_lp, LPResult  # noqa: E402
+from repro.core.ilp import solve_ilp, ILPResult  # noqa: E402
+
+__all__ = ["PackageQuery", "Constraint", "solve_lp", "LPResult",
+           "solve_ilp", "ILPResult"]

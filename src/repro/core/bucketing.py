@@ -1,0 +1,207 @@
+"""Out-of-core DLV via the bucketing scheme — paper Appendix D.2.
+
+For relations that do not fit in memory (the paper's 10^9-tuple regime):
+
+  1. one streaming pass estimates per-attribute mean/variance and the range
+     of the highest-variance attribute (Welford over chunks — this is the
+     pass the ``kernels/segstats.py`` Pallas kernel accelerates on TPU);
+  2. the range is split into equal-width buckets, recursively until every
+     bucket holds at most ``r`` tuples (r = in-memory budget);
+  3. Algorithm 6 (in-memory DLV) runs per bucket; group ids are offset into
+     a global id space.
+
+Buckets are disjoint half-open intervals on one attribute, so the global
+partition remains a valid DLV-style partition and GetGroup stays sub-linear:
+bucket lookup by ``searchsorted`` on the bucket edges, then the bucket's
+split tree.
+
+The relation is consumed through the ``ChunkSource`` protocol (anything
+yielding (n_i, k) arrays); ``MemmapSource`` adapts an on-disk .npy memmap —
+the container-scale stand-in for the paper's PostgreSQL heap scans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dlv import DLVResult, dlv
+
+
+class ChunkSource:
+    """Minimal streaming-relation protocol."""
+
+    def chunks(self, chunk_rows: int) -> Iterator[np.ndarray]:
+        raise NotImplementedError
+
+    @property
+    def num_rows(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def num_cols(self) -> int:
+        raise NotImplementedError
+
+    def gather(self, mask_fn, chunk_rows: int) -> np.ndarray:
+        """Materialise the rows where mask_fn(chunk) is True (bucket load)."""
+        parts = [c[mask_fn(c)] for c in self.chunks(chunk_rows)]
+        return np.concatenate(parts, axis=0) if parts else \
+            np.zeros((0, self.num_cols))
+
+
+class ArraySource(ChunkSource):
+    def __init__(self, X: np.ndarray):
+        self.X = X
+
+    def chunks(self, chunk_rows: int) -> Iterator[np.ndarray]:
+        for i in range(0, len(self.X), chunk_rows):
+            yield np.asarray(self.X[i:i + chunk_rows], np.float64)
+
+    @property
+    def num_rows(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def num_cols(self) -> int:
+        return self.X.shape[1]
+
+
+class MemmapSource(ArraySource):
+    """On-disk relation (np.memmap) — rows stream through a fixed budget."""
+
+    def __init__(self, path: str, shape, dtype=np.float64):
+        self.X = np.lib.format.open_memmap(path, mode="r")
+        assert self.X.shape == tuple(shape), (self.X.shape, shape)
+
+
+@dataclasses.dataclass
+class StreamStats:
+    count: int
+    mean: np.ndarray
+    var: np.ndarray
+    lo: np.ndarray
+    hi: np.ndarray
+
+
+def streaming_stats(src: ChunkSource, chunk_rows: int) -> StreamStats:
+    """One pass: per-attribute mean/var (Chan's parallel Welford) + range."""
+    count = 0
+    mean = np.zeros(src.num_cols)
+    m2 = np.zeros(src.num_cols)
+    lo = np.full(src.num_cols, np.inf)
+    hi = np.full(src.num_cols, -np.inf)
+    for c in src.chunks(chunk_rows):
+        nb = len(c)
+        if nb == 0:
+            continue
+        mb = c.mean(axis=0)
+        m2b = ((c - mb) ** 2).sum(axis=0)
+        delta = mb - mean
+        tot = count + nb
+        mean = mean + delta * (nb / tot)
+        m2 = m2 + m2b + delta ** 2 * (count * nb / tot)
+        count = tot
+        lo = np.minimum(lo, c.min(axis=0))
+        hi = np.maximum(hi, c.max(axis=0))
+    var = m2 / max(count, 1)
+    return StreamStats(count, mean, var, lo, hi)
+
+
+def _bucket_edges(src: ChunkSource, attr: int, lo: float, hi: float,
+                  r: int, chunk_rows: int, max_depth: int = 8) -> np.ndarray:
+    """Equal-width edges refined until every bucket holds <= r rows."""
+    edges = [lo, np.nextafter(hi, np.inf)]
+    for _ in range(max_depth):
+        e = np.asarray(edges)
+        counts = np.zeros(len(e) - 1, np.int64)
+        for c in src.chunks(chunk_rows):
+            idx = np.clip(np.searchsorted(e, c[:, attr], side="right") - 1,
+                          0, len(counts) - 1)
+            counts += np.bincount(idx, minlength=len(counts))
+        if counts.max() <= r:
+            return e
+        new_edges = [e[0]]
+        for i, n in enumerate(counts):
+            if n > r:
+                splits = int(np.ceil(n / r))
+                new_edges.extend(np.linspace(e[i], e[i + 1],
+                                             splits + 1)[1:].tolist())
+            else:
+                new_edges.append(e[i + 1])
+        edges = new_edges
+    return np.asarray(edges)
+
+
+@dataclasses.dataclass
+class BucketedDLV:
+    attr: int
+    edges: np.ndarray                    # bucket boundaries (ascending)
+    parts: List[Optional[DLVResult]]     # per-bucket in-memory DLV
+    group_offset: np.ndarray             # global id base per bucket
+    num_groups: int
+    gid: np.ndarray                      # (n,) global group per input row
+    reps: np.ndarray                     # (G, k)
+    counts: np.ndarray                   # (G,)
+
+    def get_group(self, t: np.ndarray) -> int:
+        b = int(np.clip(np.searchsorted(self.edges, t[self.attr],
+                                        side="right") - 1,
+                        0, len(self.parts) - 1))
+        part = self.parts[b]
+        if part is None:
+            return int(self.group_offset[b])
+        return int(self.group_offset[b]) + part.get_group(t)
+
+
+def dlv_bucketed(src: ChunkSource, d_f: int, *, memory_rows: int,
+                 chunk_rows: Optional[int] = None,
+                 rng: Optional[np.random.Generator] = None) -> BucketedDLV:
+    """Appendix D.2: bucket on the max-variance attribute, DLV per bucket."""
+    rng = rng or np.random.default_rng(0)
+    chunk_rows = chunk_rows or max(memory_rows // 4, 1024)
+    stats = streaming_stats(src, chunk_rows)
+    attr = int(np.argmax(stats.var))
+    edges = _bucket_edges(src, attr, stats.lo[attr], stats.hi[attr],
+                          memory_rows, chunk_rows)
+    nb = len(edges) - 1
+
+    parts: List[Optional[DLVResult]] = []
+    offsets = np.zeros(nb, np.int64)
+    gid = np.full(src.num_rows, -1, np.int64)
+    reps_all, counts_all = [], []
+    next_gid = 0
+    # row positions per bucket (second pass, streamed)
+    row_base = 0
+    bucket_rows: List[List[np.ndarray]] = [[] for _ in range(nb)]
+    for c in src.chunks(chunk_rows):
+        idx = np.clip(np.searchsorted(edges, c[:, attr], side="right") - 1,
+                      0, nb - 1)
+        for b in range(nb):
+            sel = np.flatnonzero(idx == b)
+            if len(sel):
+                bucket_rows[b].append(sel + row_base)
+        row_base += len(c)
+
+    for b in range(nb):
+        rows = (np.concatenate(bucket_rows[b]) if bucket_rows[b]
+                else np.zeros(0, np.int64))
+        offsets[b] = next_gid
+        if len(rows) == 0:
+            parts.append(None)
+            continue
+        lo_e, hi_e = edges[b], edges[b + 1]
+        Xb = src.gather(lambda ch: (ch[:, attr] >= lo_e)
+                        & (ch[:, attr] < hi_e), chunk_rows)
+        assert len(Xb) <= max(memory_rows, 1), (len(Xb), memory_rows)
+        res = dlv(Xb, d_f, rng=rng)
+        parts.append(res)
+        gid[rows] = next_gid + res.gid
+        reps_all.append(res.reps)
+        counts_all.append(np.diff(res.offsets))
+        next_gid += res.num_groups
+
+    reps = np.concatenate(reps_all) if reps_all else np.zeros((0, src.num_cols))
+    counts = np.concatenate(counts_all) if counts_all else np.zeros(0)
+    return BucketedDLV(attr, edges, parts, offsets, next_gid, gid, reps,
+                       counts)

@@ -1,0 +1,268 @@
+"""Dynamic Low Variance partitioning — paper §3 (Algorithms 5, 6, 7).
+
+1-D DLV is a running-variance reset scan over sorted attribute values
+(Algorithm 5) — implemented as a jitted ``lax.scan`` (tiny carry, O(n)).
+DLV (Algorithm 6) is divisive hierarchical clustering keyed by *total
+variance* (|P| * max_j var_j), splitting the top partition on its
+highest-variance attribute with a bounding variance beta = c_j sigma^2/d_f^2
+(GetScaleFactors, Algorithm 7, calibrates c_j by binary search on a sample).
+
+Partitions are kept as contiguous slices of a permutation array (the paper's
+cache-friendly layout); each split records (attr, boundary values, children)
+into a flat split tree enabling sub-linear GetGroup lookups (the PostgreSQL
+GiST role in the paper — Appendix D.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- 1-D DLV
+
+
+@partial(jax.jit, static_argnames=())
+def _dlv_scan(vals: jax.Array, beta: jax.Array) -> jax.Array:
+    """cuts[i] = True iff a delimiter is placed immediately before vals[i].
+
+    vals must be sorted ascending.  Matches Algorithm 5: the running set V
+    is reset whenever var(V u {x}) > beta.
+    """
+    def step(carry, x):
+        k, s1, s2 = carry
+        k1 = k + 1.0
+        s1n, s2n = s1 + x, s2 + x * x
+        var = s2n / k1 - (s1n / k1) ** 2
+        cut = var > beta
+        return ((jnp.where(cut, 1.0, k1), jnp.where(cut, x, s1n),
+                 jnp.where(cut, x * x, s2n)), cut)
+    _, cuts = jax.lax.scan(step, (0.0, 0.0, 0.0), vals)
+    return cuts
+
+
+def dlv_1d(values: np.ndarray, beta: float) -> np.ndarray:
+    """Delimiter positions for sorted ``values``; returns cut flags (n,)."""
+    v = np.asarray(values, np.float64)
+    shift = v.mean() if len(v) else 0.0   # numerical stabilisation
+    cuts = np.array(_dlv_scan(jnp.asarray(v - shift), jnp.float64(beta)))
+    if len(cuts):
+        cuts[0] = False
+    return cuts
+
+
+def dlv_1d_partition(values: np.ndarray, beta: float):
+    """(group_id per element, boundary values d_1..d_{p-1}) for sorted input."""
+    cuts = dlv_1d(values, beta)
+    gid = np.cumsum(cuts)
+    bounds = values[np.flatnonzero(cuts)]
+    return gid, bounds
+
+
+def ratio_score(values: np.ndarray, gid: np.ndarray) -> float:
+    """Definition 2: sum of per-partition variances / total variance."""
+    tot = float(np.var(values))
+    if tot <= 0:
+        return 0.0
+    s = 0.0
+    for g in np.unique(gid):
+        s += float(np.var(values[gid == g]))
+    return s / tot
+
+
+# ------------------------------------------------------ GetScaleFactors
+
+
+def get_scale_factors(X: np.ndarray, d_f: int, *, sample: int = 10_000,
+                      eps: float = 1e-9, max_steps: int = 60,
+                      rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """Algorithm 7: per-attribute constants c_j with beta = c_j sigma^2/d_f^2."""
+    rng = rng or np.random.default_rng(0)
+    n, k = X.shape
+    take = min(sample, n)
+    idx = rng.choice(n, size=take, replace=False) if take < n else np.arange(n)
+    P = X[idx]
+    out = np.empty(k)
+    for j in range(k):
+        vals = np.sort(P[:, j])
+        var_j = float(np.var(vals))
+        if var_j <= 0:
+            out[j] = 13.5  # paper's default c
+            continue
+        lo, hi = 0.0, 0.25 * (vals[-1] - vals[0]) ** 2
+        beta = hi
+        target = max(2, min(d_f, take))
+        for _ in range(max_steps):
+            if hi - lo <= eps * max(hi, 1.0):
+                break
+            beta = 0.5 * (lo + hi)
+            p = int(dlv_1d(vals, beta).sum()) + 1
+            if p == target:
+                break
+            if p < target:
+                hi = beta
+            else:
+                lo = beta
+        out[j] = beta * d_f * d_f / var_j
+    return out
+
+
+# ------------------------------------------------------------- split tree
+
+
+_PID_TAG = 1 << 40   # children >= _PID_TAG are unresolved leaf pids
+
+
+@dataclasses.dataclass
+class SplitNode:
+    attr: int
+    bounds: np.ndarray              # d_1..d_{p-1} ascending
+    children: List[int]             # node ids (>=0) or ~group_id (<0)
+
+
+@dataclasses.dataclass
+class DLVResult:
+    gid: np.ndarray                 # (n,) group id per tuple
+    order: np.ndarray               # permutation; groups are contiguous
+    offsets: np.ndarray             # (G+1,) slice bounds into order
+    reps: np.ndarray                # (G, k) group means
+    boxes_lo: np.ndarray            # (G, k) member min per attr
+    boxes_hi: np.ndarray            # (G, k)
+    nodes: List[SplitNode]
+    root: int
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.offsets) - 1
+
+    def members(self, g: int) -> np.ndarray:
+        return self.order[self.offsets[g]:self.offsets[g + 1]]
+
+    def get_group(self, t: np.ndarray) -> int:
+        """Sub-linear membership: descend the split tree (GiST analogue)."""
+        node_id = self.root
+        while node_id >= 0:
+            node = self.nodes[node_id]
+            i = int(np.searchsorted(node.bounds, t[node.attr], side="right"))
+            node_id = node.children[i]
+        return ~node_id
+
+
+def dlv(X: np.ndarray, d_f: int, *, c: Optional[np.ndarray] = None,
+        min_groups: Optional[int] = None,
+        rng: Optional[np.random.Generator] = None) -> DLVResult:
+    """Algorithm 6 over tuples X (n, k); produces ~n/d_f groups."""
+    X = np.asarray(X, np.float64)
+    n, k = X.shape
+    target = min_groups if min_groups is not None else max(1, n // d_f)
+    if c is None:
+        c = get_scale_factors(X, d_f, rng=rng)
+
+    order = np.arange(n)
+    # partition registry: pid -> (start, end, node_ref)
+    spans: Dict[int, Tuple[int, int]] = {0: (0, n)}
+    var_cache: Dict[int, np.ndarray] = {0: np.var(X, axis=0)}
+    next_pid = 1
+    heap: List[Tuple[float, int]] = []
+
+    def push(pid):
+        s, e = spans[pid]
+        v = var_cache[pid]
+        tv = (e - s) * float(v.max())
+        if e - s >= 2 and tv > 0:
+            heapq.heappush(heap, (-tv, pid))
+
+    push(0)
+    nodes: List[SplitNode] = []
+    # parent linkage for tree construction
+    child_slot: Dict[int, Tuple[int, int]] = {}   # pid -> (node_id, slot)
+    root = -1
+    pid_of_root = 0
+
+    while len(spans) < target and heap:
+        _, pid = heapq.heappop(heap)
+        if pid not in spans:
+            continue
+        s, e = spans[pid]
+        v = var_cache[pid]
+        j = int(np.argmax(v))
+        sigma2 = float(v[j])
+        if sigma2 <= 0:
+            continue
+        beta = c[j] * sigma2 / (d_f * d_f)
+        idx = order[s:e]
+        vals = X[idx, j]
+        perm = np.argsort(vals, kind="stable")
+        idx = idx[perm]
+        vals = vals[perm]
+        cuts = dlv_1d(vals, beta)
+        p = int(cuts.sum()) + 1
+        tries = 0
+        while p == 1 and tries < 30:
+            beta *= 0.25
+            cuts = dlv_1d(vals, beta)
+            p = int(cuts.sum()) + 1
+            tries += 1
+        if p == 1:
+            continue  # unsplittable (all-equal values)
+        order[s:e] = idx
+        bpos = np.flatnonzero(cuts)
+        bounds = vals[bpos]
+        starts = np.concatenate([[0], bpos, [e - s]])
+        node_id = len(nodes)
+        # children temporarily tagged as _PID_TAG + pid; resolved below
+        node = SplitNode(attr=j, bounds=bounds, children=[])
+        nodes.append(node)
+        if pid in child_slot:
+            pn, slot = child_slot[pid]
+            nodes[pn].children[slot] = node_id
+        elif pid == pid_of_root:
+            root = node_id
+        del spans[pid]
+        del var_cache[pid]
+        for i in range(len(starts) - 1):
+            cs, ce = s + int(starts[i]), s + int(starts[i + 1])
+            cp = next_pid
+            next_pid += 1
+            spans[cp] = (cs, ce)
+            var_cache[cp] = np.var(X[order[cs:ce]], axis=0) if ce - cs > 1 \
+                else np.zeros(k)
+            node.children.append(_PID_TAG + cp)
+            child_slot[cp] = (node_id, i)
+            push(cp)
+
+    # compact group ids in slice order; resolve tagged leaf pids to ~gid
+    pids = sorted(spans, key=lambda p: spans[p][0])
+    offsets = np.empty(len(pids) + 1, np.int64)
+    gid = np.empty(n, np.int64)
+    reps = np.empty((len(pids), k))
+    lo = np.empty((len(pids), k))
+    hi = np.empty((len(pids), k))
+    pid_to_gid = {}
+    for g, pid in enumerate(pids):
+        s, e = spans[pid]
+        offsets[g] = s
+        gid[order[s:e]] = g
+        member_x = X[order[s:e]]
+        reps[g] = member_x.mean(axis=0)
+        lo[g] = member_x.min(axis=0)
+        hi[g] = member_x.max(axis=0)
+        pid_to_gid[pid] = g
+    offsets[-1] = n
+    for node in nodes:
+        node.children = [
+            ~pid_to_gid[ch - _PID_TAG] if ch >= _PID_TAG else ch
+            for ch in node.children]
+    if root == -1:
+        # no split happened: single group
+        return DLVResult(np.zeros(n, np.int64), order,
+                         np.array([0, n]), X.mean(0, keepdims=True),
+                         X.min(0, keepdims=True), X.max(0, keepdims=True),
+                         [], -1)
+    return DLVResult(gid, order, offsets, reps, lo, hi, nodes, root)

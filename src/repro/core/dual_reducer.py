@@ -1,0 +1,94 @@
+"""Dual Reducer — paper §2.4, Algorithm 4.
+
+RENS-style heuristic ILP solver: LP relaxation x*, auxiliary LP with
+per-variable upper bound E/q (E = ||x*||_1) that spreads the support to
+~q variables, then a sub-ILP over the union of both supports; exponential
+fallback (double q, uniformly sample additional tuples) guarantees
+solvability whenever the full ILP is feasible (up to node limits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import ilp as ilp_mod
+from repro.core.lp import INFEASIBLE, OPTIMAL, solve_lp_np
+from repro.core.paql import PackageQuery
+
+
+@dataclasses.dataclass
+class PackageResult:
+    feasible: bool
+    idx: np.ndarray          # global tuple indices in the package
+    mult: np.ndarray         # multiplicities (same length)
+    obj: float               # objective in the query's own sense
+    lp_obj: float            # LP relaxation bound (query sense) over S
+    fallbacks: int = 0
+    sub_ilp_size: int = 0
+    status: str = ""
+
+    def integrality_gap(self, eps: float = 0.1) -> float:
+        """Paper §4.1 metric vs. this result's own LP bound."""
+        return (abs(self.obj) + eps) / (abs(self.lp_obj) + eps)
+
+
+def dual_reducer(query: PackageQuery, table: Dict[str, np.ndarray],
+                 S: np.ndarray, *, q: int = 500,
+                 rng: Optional[np.random.Generator] = None,
+                 max_lp_iters: int = 20000,
+                 ilp_kwargs: Optional[dict] = None,
+                 aux: str = "lp") -> PackageResult:
+    """aux: 'lp' (paper's auxiliary LP, line 4-5) | 'random' (Mini-Exp 4
+    ablation: random sample of ~q tuples instead)."""
+    rng = rng or np.random.default_rng(0)
+    ilp_kwargs = dict(ilp_kwargs or {})
+    S = np.asarray(S)
+    n = len(S)
+    c, A, bl, bu, ub = query.matrices(table, S)
+
+    lp1 = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters)
+    if lp1.status != OPTIMAL:
+        return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
+                             0.0, 0.0, status="lp_infeasible")
+    lp_obj_query = -lp1.obj if query.maximize else lp1.obj
+
+    tol = 1e-9
+    support = lp1.x > tol
+    if aux == "random":
+        support |= rng.random(n) < q / max(n, 1)
+    else:
+        E = float(np.sum(lp1.x))
+        ub_aux = np.minimum(ub, max(E / max(q, 1), 1e-9))
+        lp2 = solve_lp_np(c, A, bl, bu, ub_aux, max_iters=max_lp_iters)
+        if lp2.status == OPTIMAL:
+            support |= lp2.x > tol
+    sel = np.flatnonzero(support)
+
+    fallbacks = 0
+    while True:
+        sub = S[sel]
+        cs, As, _, _, ubs = query.matrices(table, sub)
+        res = ilp_mod.solve_ilp(cs, As, bl, bu, ubs, **ilp_kwargs)
+        if res.feasible:
+            mult = res.x
+            nz = mult > 0.5
+            obj_query = -res.obj if query.maximize else res.obj
+            return PackageResult(True, sub[nz], mult[nz], obj_query,
+                                 lp_obj_query, fallbacks, len(sel),
+                                 status="ok")
+        if len(sel) >= n:
+            return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
+                                 0.0, lp_obj_query, fallbacks, len(sel),
+                                 status="ilp_infeasible")
+        # fallback: double q, sample additional tuples uniformly (lines 9-14)
+        fallbacks += 1
+        q = min(2 * max(q, 1), n)
+        remaining = np.setdiff1d(np.arange(n), sel, assume_unique=False)
+        need = min(max(q - len(sel), 0), len(remaining))
+        if need > 0:
+            extra = rng.choice(remaining, size=need, replace=False)
+            sel = np.union1d(sel, extra)
+        else:
+            sel = np.arange(n)

@@ -1,0 +1,90 @@
+"""PackageQueryEngine: the public API tying the pipeline together.
+
+    engine = PackageQueryEngine(table, attrs, d_f=100, alpha=100_000)
+    engine.partition()                       # offline: build the hierarchy
+    result = engine.solve(query)             # Progressive Shading
+    base   = engine.solve_direct(query)      # black-box ILP (Gurobi stand-in)
+    sr     = engine.solve_sketchrefine(query)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import ilp as ilp_mod
+from repro.core.dual_reducer import PackageResult, dual_reducer
+from repro.core.hierarchy import Hierarchy
+from repro.core.lp import OPTIMAL, solve_lp_np
+from repro.core.paql import PackageQuery
+from repro.core.shading import progressive_shading
+from repro.core.sketchrefine import sketch_refine
+
+
+class PackageQueryEngine:
+    def __init__(self, table: Dict[str, np.ndarray], attrs: Sequence[str],
+                 *, d_f: int = 100, alpha: int = 100_000,
+                 seed: int = 0):
+        self.table = table
+        self.attrs = list(attrs)
+        self.d_f = d_f
+        self.alpha = alpha
+        self.rng = np.random.default_rng(seed)
+        self.hierarchy: Optional[Hierarchy] = None
+        self.partition_time_s: float = 0.0
+
+    @property
+    def n(self) -> int:
+        return len(next(iter(self.table.values())))
+
+    def partition(self) -> "PackageQueryEngine":
+        t0 = time.time()
+        self.hierarchy = Hierarchy(self.table, self.attrs, d_f=self.d_f,
+                                   alpha=self.alpha, rng=self.rng)
+        self.partition_time_s = time.time() - t0
+        return self
+
+    # ------------------------------------------------------------ solvers
+    def solve(self, query: PackageQuery, *, dr_q: int = 500,
+              ilp_kwargs: Optional[dict] = None,
+              **ps_kwargs) -> PackageResult:
+        """Progressive Shading (the paper's algorithm).  Extra kwargs are
+        the ablation knobs of progressive_shading (layer_solver, sampler,
+        dr_aux)."""
+        if self.hierarchy is None:
+            self.partition()
+        t0 = time.time()
+        res = progressive_shading(self.hierarchy, query, self.table,
+                                  alpha=self.alpha, dr_q=dr_q, rng=self.rng,
+                                  ilp_kwargs=ilp_kwargs, **ps_kwargs)
+        res.status += f" t={time.time() - t0:.3f}s"
+        return res
+
+    def solve_direct(self, query: PackageQuery,
+                     ilp_kwargs: Optional[dict] = None) -> PackageResult:
+        """Black-box ILP over the full relation (the Gurobi role)."""
+        c, A, bl, bu, ub = query.matrices(self.table, None)
+        res = ilp_mod.solve_ilp(c, A, bl, bu, ub, **(ilp_kwargs or {}))
+        if not res.feasible:
+            return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
+                                 0.0, 0.0, status="ilp_infeasible")
+        nz = res.x > 0.5
+        obj = -res.obj if query.maximize else res.obj
+        lp_obj = -res.lp_obj if query.maximize else res.lp_obj
+        return PackageResult(True, np.flatnonzero(nz), res.x[nz], obj,
+                             lp_obj, status="ok")
+
+    def solve_sketchrefine(self, query: PackageQuery,
+                           tau_frac: float = 0.001,
+                           ilp_kwargs: Optional[dict] = None) -> PackageResult:
+        return sketch_refine(query, self.table, self.attrs,
+                             tau_frac=tau_frac, ilp_kwargs=ilp_kwargs)
+
+    def lp_bound(self, query: PackageQuery) -> float:
+        """LP relaxation over the full relation (integrality-gap metric)."""
+        c, A, bl, bu, ub = query.matrices(self.table, None)
+        res = solve_lp_np(c, A, bl, bu, ub, max_iters=20000)
+        if res.status != OPTIMAL:
+            return np.nan
+        return -res.obj if query.maximize else res.obj

@@ -1,0 +1,84 @@
+"""Hierarchy of relations (paper §2, Fig. 3).
+
+Layer 0 = original tuples; layer l >= 1 = representative tuples (group
+means) from DLV-partitioning layer l-1 with downscale factor d_f, built
+until the top layer has at most ``alpha`` tuples:
+L = ceil(log_{d_f}(n / alpha)).
+
+``layers[l].part`` (l >= 1) is the DLVResult that partitioned layer l-1;
+its groups ARE the layer-l tuples, giving:
+    get_tuples(l-1, g) = layers[l].part.members(g)
+    get_group(l, t)    = layers[l].part.get_group(t)   (split-tree descent)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dlv import DLVResult, dlv
+
+
+@dataclasses.dataclass
+class Layer:
+    table: Dict[str, np.ndarray]
+    X: np.ndarray                    # (n_l, k) attr matrix (column order = attrs)
+    part: Optional[DLVResult]        # partition of layer l-1 (None for layer 0)
+    eps: float                       # min positive attr gap (Alg 3, line 1)
+
+    @property
+    def size(self) -> int:
+        return self.X.shape[0]
+
+
+def _min_gap(X: np.ndarray) -> float:
+    best = np.inf
+    for j in range(X.shape[1]):
+        v = np.unique(X[:, j])
+        if len(v) > 1:
+            gaps = np.diff(v)
+            pos = gaps[gaps > 0]
+            if len(pos):
+                best = min(best, float(pos.min()))
+    return best if np.isfinite(best) else 1e-9
+
+
+class Hierarchy:
+    def __init__(self, table: Dict[str, np.ndarray], attrs: Sequence[str],
+                 d_f: int = 100, alpha: int = 100_000,
+                 rng: Optional[np.random.Generator] = None,
+                 max_layers: int = 12):
+        self.attrs = list(attrs)
+        self.d_f = d_f
+        self.alpha = alpha
+        rng = rng or np.random.default_rng(0)
+        X0 = np.stack([np.asarray(table[a], np.float64) for a in self.attrs],
+                      axis=1)
+        self.layers: List[Layer] = [
+            Layer({a: X0[:, i] for i, a in enumerate(self.attrs)}, X0, None,
+                  _min_gap(X0) if X0.shape[0] <= 2_000_000 else 1e-9)]
+        while self.layers[-1].size > alpha and len(self.layers) <= max_layers:
+            Xl = self.layers[-1].X
+            part = dlv(Xl, d_f, rng=rng)
+            if part.num_groups >= Xl.shape[0]:
+                break  # no reduction possible
+            reps = part.reps
+            tbl = {a: reps[:, i] for i, a in enumerate(self.attrs)}
+            self.layers.append(Layer(tbl, reps, part, _min_gap(reps)))
+
+    @property
+    def L(self) -> int:
+        return len(self.layers) - 1
+
+    def get_tuples(self, l_minus_1: int, g: int) -> np.ndarray:
+        """Member indices (at layer l-1) of group g (a layer-l tuple)."""
+        return self.layers[l_minus_1 + 1].part.members(g)
+
+    def get_group(self, l: int, t: np.ndarray) -> int:
+        return self.layers[l].part.get_group(t)
+
+    def group_box(self, l: int, g: int):
+        part = self.layers[l].part
+        return part.boxes_lo[g], part.boxes_hi[g]

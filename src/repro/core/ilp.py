@@ -1,0 +1,308 @@
+"""Branch & bound ILP solver over the bounded-variable LP relaxation.
+
+This stands in for the paper's "black-box ILP solver" (Gurobi).  Package
+queries produce ILPs with a handful of constraints, so LP re-solves are
+cheap; best-first search with a most-fractional branching rule and a
+round-and-check incumbent heuristic handles the Dual Reducer sub-ILPs
+(q ≈ 500 variables) comfortably.
+
+Minimisation form throughout (PackageQuery.matrices already negates
+MAXIMIZE objectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.lp import solve_lp_np, OPTIMAL, INFEASIBLE
+
+ILP_OPTIMAL, ILP_FEASIBLE, ILP_INFEASIBLE, ILP_LIMIT = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class ILPResult:
+    status: int
+    x: np.ndarray
+    obj: float               # minimisation objective
+    nodes: int
+    lp_obj: float            # root relaxation bound
+
+    @property
+    def feasible(self) -> bool:
+        return self.status in (ILP_OPTIMAL, ILP_FEASIBLE)
+
+
+def _round_feasible(x, c, A, bl, bu, lb, ub, tol):
+    xi = np.clip(np.round(x), lb, ub)
+    act = A @ xi
+    if np.all(act >= bl - tol) and np.all(act <= bu + tol):
+        return xi, float(c @ xi)
+    return None, np.inf
+
+
+def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400):
+    """LP-guided fractional diving.
+
+    Package-query LPs have at most m fractional (basic) variables, so
+    repeatedly pinning the most-fractional variable to a nearby integer and
+    re-solving converges quickly to an integer-feasible point when one is
+    near the LP face — the workhorse incumbent finder for tight BETWEEN
+    windows where naive rounding fails.
+    """
+    lbd, ubd = lb.copy(), ub.copy()
+    for _ in range(max_steps):
+        res = solve_lp_np(c, A, bl, bu, ubd, lb=lbd, max_iters=max_lp_iters)
+        if res.status != OPTIMAL:
+            return None, np.inf
+        x = res.x
+        frac = np.abs(x - np.round(x))
+        j = int(np.argmax(frac))
+        if frac[j] < tol:
+            xi, obj = _round_feasible(x, c, A, bl, bu, lbd, ubd, tol)
+            if xi is not None:
+                return xi, obj
+            return None, np.inf
+        r = np.round(x[j])
+        # try nearest integer first, fall back to the other side
+        for v in (r, np.floor(x[j]) if r > x[j] else np.ceil(x[j])):
+            v = float(np.clip(v, lbd[j], ubd[j]))
+            lb2, ub2 = lbd.copy(), ubd.copy()
+            lb2[j] = ub2[j] = v
+            probe = solve_lp_np(c, A, bl, bu, ub2, lb=lb2,
+                                max_iters=max_lp_iters)
+            if probe.status == OPTIMAL:
+                lbd, ubd = lb2, ub2
+                break
+        else:
+            return None, np.inf
+    return None, np.inf
+
+
+def _violation(act, bl, bu):
+    return np.sum(np.maximum(bl - act, 0) + np.maximum(act - bu, 0))
+
+
+def _swap_step(x, c, A, bl, bu, lb, ub, *, improve: bool):
+    """One best swap (dec a / inc b, incl. pure inc/dec).
+
+    improve=False: minimise total constraint violation (repair mode).
+    improve=True : minimise objective among moves that keep feasibility.
+    Returns (new_x, improved?).  Vectorised over all O(|pkg| * n) moves.
+    """
+    act = A @ x
+    dec = np.flatnonzero(x > lb + 0.5)          # can decrement
+    inc = np.flatnonzero(x < ub - 0.5)          # can increment
+    if len(dec) == 0 and len(inc) == 0:
+        return x, False
+    # pad with a "no-op" pseudo-variable (zero column)
+    Ad = np.concatenate([A[:, dec], np.zeros((A.shape[0], 1))], axis=1)
+    Ai = np.concatenate([A[:, inc], np.zeros((A.shape[0], 1))], axis=1)
+    cd = np.concatenate([c[dec], [0.0]])
+    ci = np.concatenate([c[inc], [0.0]])
+    # new activity for every (a, b): act - A[:,a] + A[:,b]
+    na = act[:, None, None] - Ad[:, :, None] + Ai[:, None, :]
+    viol = (np.maximum(bl[:, None, None] - na, 0)
+            + np.maximum(na - bu[:, None, None], 0)).sum(axis=0)
+    dobj = -cd[:, None] + ci[None, :]
+    if improve:
+        feas = viol <= 1e-9
+        dobj = np.where(feas, dobj, np.inf)
+        a, b = np.unravel_index(np.argmin(dobj), dobj.shape)
+        if not np.isfinite(dobj[a, b]) or dobj[a, b] >= -1e-12:
+            return x, False
+    else:
+        cur = _violation(act, bl, bu)
+        score = viol + 1e-12 * dobj             # tie-break toward objective
+        a, b = np.unravel_index(np.argmin(score), score.shape)
+        if viol[a, b] >= cur - 1e-12:
+            return x, False
+    x = x.copy()
+    if a < len(dec):
+        x[dec[a]] -= 1
+    if b < len(inc):
+        x[inc[b]] += 1
+    return x, True
+
+
+def _swap_search(x0, c, A, bl, bu, lb, ub, tol, *, max_moves=200):
+    """Min-conflicts repair followed by 1-swap objective improvement."""
+    x = np.clip(np.round(x0), lb, ub)
+    for _ in range(max_moves):
+        if _violation(A @ x, bl, bu) <= tol:
+            break
+        x, moved = _swap_step(x, c, A, bl, bu, lb, ub, improve=False)
+        if not moved:
+            return None, np.inf
+    if _violation(A @ x, bl, bu) > tol:
+        return None, np.inf
+    for _ in range(max_moves):
+        x, moved = _swap_step(x, c, A, bl, bu, lb, ub, improve=True)
+        if not moved:
+            break
+    return x, float(c @ x)
+
+
+def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
+                      max_rounds=120, seed=0):
+    """Objective feasibility pump (Fischetti-Glover-Lodi) for the tight
+    BETWEEN-window packages where rounding/diving stall.
+
+    Alternates LP projection and rounding, minimising an L1 distance to the
+    current integer point blended with the (normalised) true objective;
+    random flips break cycles.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(c)
+    cn = c / (np.linalg.norm(c) + 1e-12)
+    res = solve_lp_np(c, A, bl, bu, ub, lb=lb, max_iters=max_lp_iters)
+    if res.status != OPTIMAL:
+        return None, np.inf
+    x_tilde = np.clip(np.round(res.x), lb, ub)
+    w = 0.5
+    last = None
+    for it in range(max_rounds):
+        act = A @ x_tilde
+        if np.all(act >= bl - tol) and np.all(act <= bu + tol):
+            return x_tilde, float(c @ x_tilde)
+        # distance objective: push x toward x_tilde
+        c_dist = np.where(x_tilde <= lb + 0.5, 1.0,
+                          np.where(x_tilde >= ub - 0.5, -1.0, 0.0))
+        res = solve_lp_np(c_dist + w * cn, A, bl, bu, ub, lb=lb,
+                          max_iters=max_lp_iters)
+        if res.status != OPTIMAL:
+            return None, np.inf
+        new_tilde = np.clip(np.round(res.x), lb, ub)
+        if last is not None and np.array_equal(new_tilde, last):
+            # cycle: flip the T components with largest rounding error
+            err = np.abs(res.x - new_tilde)
+            T = int(rng.integers(2, 8))
+            idx = np.argsort(-err)[:T]
+            for j in idx:
+                if res.x[j] > new_tilde[j]:
+                    new_tilde[j] = min(new_tilde[j] + 1, ub[j])
+                else:
+                    new_tilde[j] = max(new_tilde[j] - 1, lb[j])
+        last = x_tilde
+        x_tilde = new_tilde
+        w *= 0.7
+    return None, np.inf
+
+
+def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
+              max_nodes: int = 5000, tol: float = 1e-6,
+              time_limit_s: float = 60.0, max_lp_iters: int = 8000
+              ) -> ILPResult:
+    c = np.asarray(c, np.float64)
+    A = np.atleast_2d(np.asarray(A, np.float64))
+    m, n = A.shape
+    bl = np.asarray(bl, np.float64)
+    bu = np.asarray(bu, np.float64)
+    ub0 = np.asarray(ub, np.float64)
+    lb0 = np.zeros(n) if lb is None else np.asarray(lb, np.float64)
+
+    root = solve_lp_np(c, A, bl, bu, ub0, lb=lb0, max_iters=max_lp_iters)
+    if root.status == INFEASIBLE:
+        return ILPResult(ILP_INFEASIBLE, np.zeros(n), np.inf, 1, np.inf)
+    root_obj = root.obj
+
+    best_x, best_obj = _round_feasible(root.x, c, A, bl, bu, lb0, ub0, tol)
+    if best_x is None:
+        # swap-based repair + improvement from the rounded LP point
+        best_x, best_obj = _swap_search(root.x, c, A, bl, bu, lb0, ub0, tol)
+    if best_x is None:
+        # randomized-rounding restarts escape repair local minima
+        rng = np.random.default_rng(7)
+        for _ in range(8):
+            frac = root.x - np.floor(root.x)
+            xr = np.floor(root.x) + (rng.random(n) < frac)
+            jitter = rng.random(n) < (3.0 / max(n, 1))
+            xr = np.clip(xr + jitter * rng.integers(-1, 2, n), lb0, ub0)
+            bx, bo = _swap_search(xr, c, A, bl, bu, lb0, ub0, tol)
+            if bx is not None:
+                best_x, best_obj = bx, bo
+                break
+    if best_x is None:
+        best_x, best_obj = _dive(c, A, bl, bu, lb0, ub0, tol, max_lp_iters,
+                                 max_steps=4 * m + 8)
+    if best_x is None:
+        best_x, best_obj = _feasibility_pump(c, A, bl, bu, lb0, ub0, tol,
+                                             max_lp_iters)
+    if best_x is not None:
+        bx, bo = _swap_search(best_x, c, A, bl, bu, lb0, ub0, tol)
+        if bx is not None and bo < best_obj:
+            best_x, best_obj = bx, bo
+
+    heap = []
+    counter = itertools.count()
+    heapq.heappush(heap, (root.obj, next(counter), lb0, ub0, root.x))
+    nodes = 0
+    t0 = time.time()
+    status = ILP_OPTIMAL
+    while heap:
+        if nodes >= max_nodes or (time.time() - t0) > time_limit_s:
+            status = ILP_LIMIT
+            break
+        bound, _, lbn, ubn, xlp = heapq.heappop(heap)
+        if bound >= best_obj - 1e-9:
+            continue
+        nodes += 1
+        frac = np.abs(xlp - np.round(xlp))
+        j = int(np.argmax(frac))
+        if frac[j] < tol:
+            # integral LP solution: new incumbent
+            xi = np.round(xlp)
+            obj = float(c @ xi)
+            if obj < best_obj:
+                best_obj, best_x = obj, xi
+            continue
+        fl = np.floor(xlp[j])
+        for lo_j, hi_j in ((lbn[j], fl), (fl + 1, ubn[j])):
+            if lo_j > hi_j:
+                continue
+            lb2, ub2 = lbn.copy(), ubn.copy()
+            lb2[j], ub2[j] = lo_j, hi_j
+            res = solve_lp_np(c, A, bl, bu, ub2, lb=lb2,
+                              max_iters=max_lp_iters)
+            if res.status == INFEASIBLE:
+                continue
+            if res.obj >= best_obj - 1e-9:
+                continue
+            xi, obj = _round_feasible(res.x, c, A, bl, bu, lb2, ub2, tol)
+            if obj < best_obj:
+                best_obj, best_x = obj, xi
+            heapq.heappush(heap, (res.obj, next(counter), lb2, ub2, res.x))
+
+    if best_x is None:
+        st = ILP_INFEASIBLE if status == ILP_OPTIMAL else ILP_LIMIT
+        return ILPResult(st, np.zeros(n), np.inf, nodes, root_obj)
+    st = status if status == ILP_LIMIT else ILP_OPTIMAL
+    if st == ILP_LIMIT:
+        st = ILP_FEASIBLE
+    return ILPResult(st, best_x, best_obj, nodes, root_obj)
+
+
+def brute_force_ilp(c, A, bl, bu, ub) -> ILPResult:
+    """Exhaustive oracle for tiny instances (tests only)."""
+    c = np.asarray(c, np.float64)
+    A = np.atleast_2d(np.asarray(A, np.float64))
+    n = A.shape[1]
+    ub = np.asarray(ub).astype(int)
+    best, best_obj = None, np.inf
+    total = int(np.prod(ub + 1))
+    assert total <= 2_000_000, "too large for brute force"
+    for combo in itertools.product(*[range(u + 1) for u in ub]):
+        x = np.asarray(combo, np.float64)
+        act = A @ x
+        if np.all(act >= np.asarray(bl) - 1e-9) and np.all(
+                act <= np.asarray(bu) + 1e-9):
+            obj = float(c @ x)
+            if obj < best_obj:
+                best_obj, best = obj, x
+    if best is None:
+        return ILPResult(ILP_INFEASIBLE, np.zeros(n), np.inf, total, np.inf)
+    return ILPResult(ILP_OPTIMAL, best, best_obj, total, -np.inf)

@@ -1,0 +1,50 @@
+"""KD-TREE partitioning as used by SketchRefine (Brucato et al. [5]) —
+the baseline DLV is compared against (paper §3.3, Mini-Exp 5, Fig. 7).
+
+A cluster is split (on its widest-variance attribute, at the mean) while
+(1) |P| > size threshold tau, or (2) radius > omega.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class KDResult:
+    gid: np.ndarray
+    reps: np.ndarray
+    num_groups: int
+
+
+def kdtree_partition(X: np.ndarray, *, tau: int, omega: float = np.inf,
+                     max_groups: int = 1 << 20) -> KDResult:
+    X = np.asarray(X, np.float64)
+    n, k = X.shape
+    gid = np.zeros(n, np.int64)
+    stack: List[np.ndarray] = [np.arange(n)]
+    final: List[np.ndarray] = []
+    while stack and len(stack) + len(final) < max_groups:
+        idx = stack.pop()
+        sub = X[idx]
+        radius = np.abs(sub - sub.mean(0)).max() if len(idx) else 0.0
+        if len(idx) <= 1 or (len(idx) <= tau and radius <= omega):
+            final.append(idx)
+            continue
+        j = int(np.argmax(sub.var(0)))
+        mu = sub[:, j].mean()
+        left = idx[sub[:, j] < mu]
+        right = idx[sub[:, j] >= mu]
+        if len(left) == 0 or len(right) == 0:
+            final.append(idx)     # degenerate: all values equal to mean side
+            continue
+        stack.append(left)
+        stack.append(right)
+    final.extend(stack)
+    reps = np.empty((len(final), k))
+    for g, idx in enumerate(final):
+        gid[idx] = g
+        reps[g] = X[idx].mean(0)
+    return KDResult(gid, reps, len(final))

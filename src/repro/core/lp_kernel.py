@@ -1,0 +1,134 @@
+"""Dual simplex driven by the Pallas kernels.
+
+Same pivot rules as ``core.lp._solve_lp_jax`` but the two O(n) inner
+procedures run through the TPU kernels:
+
+  * pricing (alpha, BFRT ratios, flip costs) -> kernels.pricing (fused,
+    one pass over A),
+  * BFRT breakpoint selection -> kernels.bfrt (bucketed two-pass select).
+
+On CPU the kernels execute in interpret mode (slow, correctness only);
+on TPU they are the production path.  Tested against solve_lp_np on
+random LPs in tests/test_lp_kernel.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lp import (INFEASIBLE, ITER_LIMIT, OPTIMAL, LPResult,
+                           row_scaling, standard_form)
+from repro.kernels.bfrt import bfrt_select
+from repro.kernels.pricing import pricing
+
+
+@partial(jax.jit, static_argnames=("max_iters", "interpret"))
+def _solve_lp_kernel_jax(cf, A, l, u, max_iters: int, interpret: bool):
+    N = A.shape[1]
+    m = A.shape[0]
+    n = N - m
+    tol = 1e-7
+
+    basis0 = jnp.arange(n, N)
+    in_basis0 = jnp.zeros(N, bool).at[basis0].set(True)
+    at_upper0 = jnp.zeros(N, bool).at[:n].set(
+        (cf[:n] < 0) | jnp.isinf(l[:n]))
+
+    def xb_of(basis, in_basis, at_upper):
+        Binv = jnp.linalg.inv(A[:, basis])
+        xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
+        xN = xN.at[basis].set(0.0)
+        xB = -Binv @ (A @ xN)
+        return Binv, xN, xB
+
+    def cond(state):
+        _, _, _, status, it = state
+        return (status == ITER_LIMIT) & (it < max_iters)
+
+    def body(state):
+        basis, in_basis, at_upper, status, it = state
+        Binv, xN, xB = xb_of(basis, in_basis, at_upper)
+        lB, uB = l[basis], u[basis]
+        viol_lo = lB - xB
+        viol_hi = xB - uB
+        viol = jnp.maximum(viol_lo, viol_hi)
+        r = jnp.argmax(viol)
+        done = viol[r] <= tol
+
+        above = viol_hi[r] >= viol_lo[r]
+        delta = jnp.where(above, xB[r] - uB[r], xB[r] - lB[r])
+        s = jnp.where(delta > 0, 1.0, -1.0)
+        rho = Binv[r]
+        y = Binv.T @ cf[basis]
+
+        # ---- Pallas: fused pricing over all N columns ----
+        state_code = jnp.where(in_basis, 2,
+                               jnp.where(at_upper, 1, 0)).astype(jnp.int32)
+        lo_safe = jnp.where(jnp.isfinite(l), l, 0.0)
+        width = jnp.where(jnp.isfinite(u - l), u - l, 1e30)
+        alpha, ratio, cost = pricing(A, rho, y, cf, state_code,
+                                     lo_safe, lo_safe + width, s,
+                                     block=min(2048, N),
+                                     interpret=interpret)
+        # ---- Pallas: bucketed BFRT select ----
+        q, flips, has_cross = bfrt_select(ratio, cost, jnp.abs(delta),
+                                          interpret=interpret)
+
+        new_status = jnp.where(done, OPTIMAL,
+                               jnp.where(~has_cross, INFEASIBLE,
+                                         ITER_LIMIT)).astype(jnp.int32)
+        do_pivot = new_status == ITER_LIMIT
+
+        leave = basis[r]
+        at_upper2 = jnp.where(flips, ~at_upper, at_upper)
+        at_upper2 = at_upper2.at[leave].set(delta > 0)
+        in_basis2 = in_basis.at[leave].set(False).at[q].set(True)
+        basis2 = basis.at[r].set(q)
+
+        basis = jnp.where(do_pivot, basis2, basis)
+        in_basis = jnp.where(do_pivot, in_basis2, in_basis)
+        at_upper = jnp.where(do_pivot, at_upper2, at_upper)
+        return (basis, in_basis, at_upper, new_status,
+                (it + 1).astype(jnp.int32))
+
+    state = (basis0, in_basis0, at_upper0, jnp.int32(ITER_LIMIT),
+             jnp.int32(0))
+    basis, in_basis, at_upper, status, it = jax.lax.while_loop(
+        cond, body, state)
+    Binv, xN, xB = xb_of(basis, in_basis, at_upper)
+    x = xN.at[basis].set(xB)
+    y = Binv.T @ cf[basis]
+    obj = cf @ jnp.where(jnp.isfinite(x), x, 0.0)
+    return status, x[:n], obj, it, basis, at_upper, y
+
+
+def solve_lp_kernel(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
+                    max_iters: int = 5000,
+                    interpret: Optional[bool] = None) -> LPResult:
+    """Kernel-backed twin of core.lp.solve_lp (same conventions)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c = np.asarray(c, np.float64)
+    A_t = np.atleast_2d(np.asarray(A_t, np.float64))
+    m, n = A_t.shape
+    scale = row_scaling(A_t)
+    A_t = A_t * scale[:, None]
+    bl = np.asarray(bl, np.float64) * scale
+    bu = np.asarray(bu, np.float64) * scale
+    cf, A, l, u = standard_form(c, A_t, bl, bu, np.asarray(ub, np.float64))
+    if lb is not None:
+        l[:n] = lb
+    if np.any(l > u + 1e-9):
+        return LPResult(INFEASIBLE, np.zeros(n), 0.0, 0,
+                        np.arange(n, n + m), np.zeros(n + m, bool),
+                        np.zeros(m))
+    status, x, obj, it, basis, at_upper, y = _solve_lp_kernel_jax(
+        jnp.asarray(cf), jnp.asarray(A), jnp.asarray(l), jnp.asarray(u),
+        max_iters, interpret)
+    return LPResult(int(status), np.asarray(x), float(obj), int(it),
+                    np.asarray(basis), np.asarray(at_upper),
+                    np.asarray(y) * scale)

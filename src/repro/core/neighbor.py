@@ -1,0 +1,64 @@
+"""Neighbor Sampling — paper §2.2, Algorithm 3.
+
+Expands the LP support S'_l (layer-l tuples) into layer-(l-1) candidates,
+then augments with *neighboring groups* found by constructing 3^k probe
+tuples just outside / inside each group's attribute box and locating their
+groups via the split tree (GetGroup), until the candidate set reaches the
+augmenting size alpha.  This is what recovers the paper's "hidden outliers".
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import List, Set
+
+import numpy as np
+
+from repro.core.hierarchy import Hierarchy
+
+MAX_PROBE_ATTRS = 8  # 3^8 = 6561 probes; queries use <= ~5 attrs
+
+
+def neighbor_sampling(hier: Hierarchy, l: int, alpha: int,
+                      s_prime: np.ndarray, obj_attr: str,
+                      maximize: bool) -> np.ndarray:
+    """Returns candidate indices at layer l-1 (at most alpha)."""
+    layer = hier.layers[l]
+    part = layer.part
+    eps = layer.eps
+    obj_l = layer.table[obj_attr]
+    sgn = -1.0 if maximize else 1.0      # heap pops best objective first
+
+    members = [hier.get_tuples(l - 1, int(g)) for g in s_prime]
+    seen: Set[int] = set(int(g) for g in s_prime)
+    count = sum(len(m) for m in members)
+    heap: List = [(sgn * float(obj_l[g]), int(g)) for g in seen]
+    heapq.heapify(heap)
+
+    k = min(layer.X.shape[1], MAX_PROBE_ATTRS)
+    while heap and count < alpha:
+        _, g = heapq.heappop(heap)
+        lo, hi = hier.group_box(l, g)
+        choices = [(lo[j] - eps, 0.5 * (lo[j] + hi[j]), hi[j] + eps)
+                   for j in range(k)]
+        probe = np.array([0.5 * (lo[j] + hi[j])
+                          for j in range(layer.X.shape[1])])
+        for combo in itertools.product(*choices):
+            probe[:k] = combo
+            gp = part.get_group(probe)
+            if gp not in seen:
+                seen.add(gp)
+                heapq.heappush(heap, (sgn * float(obj_l[gp]), gp))
+                m = hier.get_tuples(l - 1, gp)
+                members.append(m)
+                count += len(m)
+                if count >= alpha:
+                    break
+
+    cand = np.unique(np.concatenate(members)) if members else \
+        np.zeros(0, np.int64)
+    if len(cand) > alpha:
+        obj_lm1 = hier.layers[l - 1].table[obj_attr][cand]
+        order = np.argsort(-obj_lm1 if maximize else obj_lm1, kind="stable")
+        cand = np.sort(cand[order[:alpha]])
+    return cand

@@ -1,0 +1,97 @@
+"""PaQL-style package queries and their ILP/LP standard forms.
+
+A package query over a relation R (columns = named float arrays):
+
+    SELECT PACKAGE(*) FROM R REPEAT r
+    WHERE <local predicate mask>
+    SUCH THAT
+        cl <= COUNT(P.*) <= cu
+        SUM(P.attr) {<=,>=,BETWEEN} b ...
+        AVG(P.attr) {<=,>=} t ...
+    {MAXIMIZE|MINIMIZE} SUM(P.obj)
+
+maps to the ILP  opt cᵀx  s.t.  bl <= Ax <= bu,  0 <= x <= r+1,  x ∈ ℤ.
+
+AVG(P.a) >= t is linearised as SUM(P.a) - t*COUNT(P) >= 0, i.e. a row with
+coefficients (a_i - t).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """bl <= SUM(coeff_expr) <= bu over the package."""
+    attr: Optional[str]          # None => COUNT (coefficients 1)
+    lo: float = -INF
+    hi: float = INF
+    avg_target: Optional[float] = None  # AVG constraint: coeff = attr - target
+
+    def coeffs(self, table: Dict[str, np.ndarray], n: int) -> np.ndarray:
+        if self.attr is None:
+            return np.ones(n)
+        col = np.asarray(table[self.attr], dtype=np.float64)
+        if self.avg_target is not None:
+            return col - self.avg_target
+        return col
+
+
+@dataclasses.dataclass(frozen=True)
+class PackageQuery:
+    objective_attr: str
+    maximize: bool
+    constraints: Tuple[Constraint, ...]
+    repeat: int = 0              # each tuple usable up to repeat+1 times
+    predicate_attr: Optional[str] = None   # local predicate: column of {0,1}
+
+    @property
+    def m(self) -> int:
+        return len(self.constraints)
+
+    # ------------------------------------------------------------------
+    def matrices(self, table: Dict[str, np.ndarray],
+                 subset: Optional[np.ndarray] = None):
+        """Dense (c, A, bl, bu, ub) for the tuples in ``subset`` (or all).
+
+        Returns the MINIMIZATION form: internal c is negated for MAXIMIZE.
+        """
+        any_col = next(iter(table.values()))
+        n_all = len(any_col)
+        idx = np.arange(n_all) if subset is None else np.asarray(subset)
+        view = {k: np.asarray(v, np.float64)[idx] for k, v in table.items()}
+        n = len(idx)
+        c = np.asarray(view[self.objective_attr], np.float64).copy()
+        if self.maximize:
+            c = -c
+        A = np.stack([ct.coeffs(view, n) for ct in self.constraints])
+        bl = np.array([ct.lo for ct in self.constraints], np.float64)
+        bu = np.array([ct.hi for ct in self.constraints], np.float64)
+        ub = np.full(n, self.repeat + 1, np.float64)
+        # Local predicates (Appendix E): applied where the column exists —
+        # layer-0 tables carry it (final ILP forces ub=0 on excluded
+        # tuples); representative layers don't (predicates are ignored
+        # until the final layer, the paper's "efficient approach").
+        if self.predicate_attr is not None and self.predicate_attr in view:
+            ub = ub * np.asarray(view[self.predicate_attr], np.float64)
+        return c, A, bl, bu, ub
+
+    def objective_value(self, table: Dict[str, np.ndarray],
+                        idx: np.ndarray, mult: np.ndarray) -> float:
+        col = np.asarray(table[self.objective_attr], np.float64)
+        return float(np.dot(col[idx], mult))
+
+    def check_package(self, table: Dict[str, np.ndarray], idx: np.ndarray,
+                      mult: np.ndarray, tol: float = 1e-6) -> bool:
+        for ct in self.constraints:
+            coeff = ct.coeffs({k: np.asarray(v, np.float64)[idx]
+                               for k, v in table.items()}, len(idx))
+            val = float(np.dot(coeff, mult))
+            if val < ct.lo - tol or val > ct.hi + tol:
+                return False
+        return True

@@ -1,0 +1,103 @@
+"""Shading + Progressive Shading — paper §2, Algorithms 1 and 2.
+
+Each Shading step solves the LP relaxation over the current candidate set at
+layer l (Parallel Dual Simplex), keeps the support, and expands/augments via
+Neighbor Sampling down to layer l-1.  At layer 0, Dual Reducer produces the
+final package.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.dual_reducer import PackageResult, dual_reducer
+from repro.core.hierarchy import Hierarchy
+from repro.core.lp import OPTIMAL, solve_lp_np
+from repro.core.neighbor import neighbor_sampling
+from repro.core.paql import PackageQuery
+
+FALLBACK_SEED = 64   # LP-infeasible layer: seed with top-k by objective
+
+
+def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
+            query: PackageQuery, *, max_lp_iters: int = 20000,
+            layer_solver: str = "lp", sampler: str = "neighbor",
+            rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """One Shading step (Algorithm 2): layer-l candidates -> layer-(l-1).
+
+    Ablation knobs (paper Mini-Experiments 1 and 2):
+      layer_solver: 'lp' (paper's choice) | 'ilp' (replace line 2 with an
+        ILP — shown not to help);
+      sampler: 'neighbor' (Algorithm 3) | 'random' (random representative
+        sampling — shown much worse).
+    """
+    layer_table = hier.layers[l].table
+    c, A, bl, bu, ub = query.matrices(layer_table, S_l)
+    if layer_solver == "ilp":
+        from repro.core.ilp import solve_ilp
+        res_i = solve_ilp(c, A, bl, bu, ub, max_nodes=100, time_limit_s=10)
+        s_prime = S_l[res_i.x > 1e-9] if res_i.feasible else np.zeros(0, int)
+    else:
+        res = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters)
+        s_prime = S_l[res.x > 1e-9] if res.status == OPTIMAL \
+            else np.zeros(0, np.int64)
+    if len(s_prime) == 0:
+        # representative-level solve infeasible: seed augmentation with the
+        # best-objective representatives so it can still recover
+        obj = layer_table[query.objective_attr][S_l]
+        order = np.argsort(-obj if query.maximize else obj, kind="stable")
+        s_prime = S_l[order[:FALLBACK_SEED]]
+
+    if sampler == "random":
+        rng = rng or np.random.default_rng(0)
+        members = [hier.get_tuples(l - 1, int(g)) for g in s_prime]
+        seen = set(int(g) for g in s_prime)
+        count = sum(len(m) for m in members)
+        n_l = hier.layers[l].size
+        while count < alpha and len(seen) < n_l:
+            g = int(rng.integers(0, n_l))
+            if g in seen:
+                continue
+            seen.add(g)
+            m = hier.get_tuples(l - 1, g)
+            members.append(m)
+            count += len(m)
+        cand = np.unique(np.concatenate(members))
+        return cand[:alpha]
+    return neighbor_sampling(hier, l, alpha, s_prime,
+                             query.objective_attr, query.maximize)
+
+
+@dataclasses.dataclass
+class PSStats:
+    layer_sizes: list
+    lp_iters: int
+    time_s: float
+
+
+def progressive_shading(hier: Hierarchy, query: PackageQuery,
+                        table: Dict[str, np.ndarray], *,
+                        alpha: Optional[int] = None,
+                        dr_q: int = 500,
+                        rng: Optional[np.random.Generator] = None,
+                        ilp_kwargs: Optional[dict] = None,
+                        layer_solver: str = "lp",
+                        sampler: str = "neighbor",
+                        dr_aux: str = "lp"
+                        ) -> PackageResult:
+    """Algorithm 1: iterate Shading from layer L to 0, then Dual Reducer."""
+    t0 = time.time()
+    alpha = alpha or hier.alpha
+    S = np.arange(hier.layers[hier.L].size)
+    sizes = [len(S)]
+    for l in range(hier.L, 0, -1):
+        S = shading(hier, l, alpha, S, query, layer_solver=layer_solver,
+                    sampler=sampler, rng=rng)
+        sizes.append(len(S))
+    res = dual_reducer(query, table, S, q=dr_q, rng=rng,
+                       ilp_kwargs=ilp_kwargs, aux=dr_aux)
+    res.status += f" layers={sizes}"
+    return res

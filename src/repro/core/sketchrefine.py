@@ -1,0 +1,102 @@
+"""SketchRefine baseline (Brucato et al. [5]) — the prior state of the art
+Progressive Shading is evaluated against (paper §4.2).
+
+Sketch: solve the package ILP over KD-tree representative tuples, where each
+representative may be picked up to |group| times.  Refine: for each sketched
+group in objective order, replace its representative with the group's actual
+tuples and re-solve, keeping already-fixed tuples and the other groups'
+representatives; greedy, no backtracking — exactly the behaviour whose
+false-infeasibility/quality limits §4.2 demonstrates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import ilp as ilp_mod
+from repro.core.dual_reducer import PackageResult
+from repro.core.kdtree import kdtree_partition
+from repro.core.paql import PackageQuery
+
+
+def sketch_refine(query: PackageQuery, table: Dict[str, np.ndarray],
+                  attrs, *, tau_frac: float = 0.001,
+                  ilp_kwargs: Optional[dict] = None) -> PackageResult:
+    ilp_kwargs = dict(ilp_kwargs or {})
+    X = np.stack([np.asarray(table[a], np.float64) for a in attrs], axis=1)
+    n = X.shape[0]
+    tau = max(2, int(tau_frac * n))
+    part = kdtree_partition(X, tau=tau)
+    col = {a: part.reps[:, i] for i, a in enumerate(attrs)}
+    sizes = np.bincount(part.gid, minlength=part.num_groups).astype(np.float64)
+
+    # ---- sketch: ILP over representatives, multiplicity up to group size
+    c, A, bl, bu, _ = query.matrices(col, None)
+    res = ilp_mod.solve_ilp(c, A, bl, bu, sizes * (query.repeat + 1),
+                            **ilp_kwargs)
+    if not res.feasible:
+        return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
+                             0.0, 0.0, status="sketch_infeasible")
+    lp_obj_query = -res.lp_obj if query.maximize else res.lp_obj
+
+    # ---- refine: group by group, in representative-objective order
+    chosen_groups = np.flatnonzero(res.x > 0.5)
+    obj_rep = col[query.objective_attr][chosen_groups]
+    order = np.argsort(-obj_rep if query.maximize else obj_rep)
+    chosen_groups = chosen_groups[order]
+
+    fixed_idx: list = []
+    fixed_mult: list = []
+    rep_mult = res.x.copy()
+    for g in chosen_groups:
+        members = np.flatnonzero(part.gid == g)
+        # candidate variables: fixed tuples (bounds pinned) + this group's
+        # tuples + remaining representatives
+        rem_groups = rep_mult.copy()
+        rem_groups[g] = 0.0
+        rg = np.flatnonzero(rem_groups > 0.5)
+        nf, ng, nr = len(fixed_idx), len(members), len(rg)
+        cols = {a: np.concatenate([
+            np.asarray(table[a], np.float64)[np.asarray(fixed_idx, int)]
+            if nf else np.zeros(0),
+            np.asarray(table[a], np.float64)[members],
+            col[a][rg]]) for a in query_attrs(query, table)}
+        c2, A2, bl2, bu2, _ = query.matrices(cols, None)
+        lb2 = np.concatenate([np.asarray(fixed_mult, np.float64) if nf
+                              else np.zeros(0), np.zeros(ng + nr)])
+        ub2 = np.concatenate([
+            np.asarray(fixed_mult, np.float64) if nf else np.zeros(0),
+            np.full(ng, query.repeat + 1.0),
+            sizes[rg] * (query.repeat + 1)])
+        r2 = ilp_mod.solve_ilp(c2, A2, bl2, bu2, ub2, lb=lb2, **ilp_kwargs)
+        if not r2.feasible:
+            return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
+                                 0.0, lp_obj_query,
+                                 status="refine_infeasible")
+        x2 = r2.x
+        gm = x2[nf:nf + ng]
+        nz = gm > 0.5
+        fixed_idx.extend(members[nz].tolist())
+        fixed_mult.extend(gm[nz].tolist())
+        rep_mult[rg] = x2[nf + ng:]
+        rep_mult[g] = 0.0
+        if not np.any(rep_mult > 0.5):
+            break
+
+    idx = np.asarray(fixed_idx, np.int64)
+    mult = np.asarray(fixed_mult, np.float64)
+    if not query.check_package(table, idx, mult):
+        return PackageResult(False, idx, mult, 0.0, lp_obj_query,
+                             status="refine_package_invalid")
+    obj = query.objective_value(table, idx, mult)
+    return PackageResult(True, idx, mult, obj, lp_obj_query, status="ok")
+
+
+def query_attrs(query: PackageQuery, table) -> list:
+    attrs = [query.objective_attr]
+    for ct in query.constraints:
+        if ct.attr is not None and ct.attr not in attrs:
+            attrs.append(ct.attr)
+    return attrs

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import ShardingRules, make_rules
+
+__all__ = ["ShardingRules", "make_rules"]

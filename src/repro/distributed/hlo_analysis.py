@@ -1,0 +1,349 @@
+"""Static HLO analysis: collective bytes (and a while-loop-aware walker).
+
+``compiled.cost_analysis()`` gives FLOPs/bytes but no collective traffic, and
+XLA's cost analysis does not multiply while-loop bodies by their trip count.
+This module parses the (post-SPMD-partitioning) HLO text:
+
+  * splits it into named computations,
+  * finds while loops and recovers their trip count from the loop-condition
+    computation (scan loops compare the induction variable against a
+    constant),
+  * sums per-device link traffic of every collective, weighting ops inside
+    while bodies by the trip count.
+
+Per-device traffic model (ring algorithms, group size n):
+  all-gather:          out_bytes * (n-1)/n
+  reduce-scatter:      out_bytes * (n-1)
+  all-reduce:          out_bytes * 2(n-1)/n
+  all-to-all:          out_bytes * (n-1)/n
+  collective-permute:  out_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^=]*\}|\[[\dx,]+\]<=\[\d+\])")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, first.count(",") + 1)
+    # iota form: [groups,size]<=[total] (possibly [a,b,c]... -> last dim)
+    dims = re.findall(r"\d+", g.split("<=")[0])
+    return int(dims[-1]) if dims else default
+
+
+_FACTORS = {
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    total_bytes: float
+
+    def merged(self) -> Dict[str, float]:
+        out = dict(self.bytes_by_kind)
+        out["total"] = self.total_bytes
+        return out
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            # computation headers are top-level lines "…%name (params) -> type {"
+            if (line and not line[0].isspace() and "->" in line
+                    and line.rstrip().endswith("{")):
+                tokens = line.replace("ENTRY", "").strip().split()
+                if tokens:
+                    cur = tokens[0].lstrip("%")
+                    comps[cur] = []
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the loop condition (scan: iter < L)."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo: str, default_group: int = 16) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    memo: Dict[str, Tuple[Dict[str, float], Dict[str, int]]] = {}
+
+    def walk(name: str) -> Tuple[Dict[str, float], Dict[str, int]]:
+        if name in memo:
+            return memo[name]
+        memo[name] = ({}, {})  # cycle guard
+        by: Dict[str, float] = {}
+        cnt: Dict[str, int] = {}
+        for line in comps.get(name, ()):
+            cm = _COLLECTIVE_RE.search(line)
+            if cm:
+                ty = cm.group(1) or cm.group(2)
+                kind = cm.group(3)
+                if "-done(" in line:
+                    continue  # counted at -start
+                n = _group_size(line, default_group)
+                b = shape_bytes(ty) * _FACTORS[kind](n)
+                by[kind] = by.get(kind, 0.0) + b
+                cnt[kind] = cnt.get(kind, 0) + 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                sub_by, sub_cnt = walk(body)
+                for k, v in sub_by.items():
+                    by[k] = by.get(k, 0.0) + trips * v
+                for k, v in sub_cnt.items():
+                    cnt[k] = cnt.get(k, 0) + trips * v
+            for call in re.finditer(r"(?:call|fusion)\(.*?to_apply=%?([\w\.\-]+)", line):
+                sub_by, sub_cnt = walk(call.group(1))
+                for k, v in sub_by.items():
+                    by[k] = by.get(k, 0.0) + v
+                for k, v in sub_cnt.items():
+                    cnt[k] = cnt.get(k, 0) + v
+        memo[name] = (by, cnt)
+        return memo[name]
+
+    # entry computation: the one defined with ENTRY; fall back to scanning all
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # sum everything not referenced as a body (conservative fallback)
+        by: Dict[str, float] = {}
+        cnt: Dict[str, int] = {}
+        for name in comps:
+            sub_by, sub_cnt = walk(name)
+            for k, v in sub_by.items():
+                by[k] = by.get(k, 0.0) + v
+            for k, v in sub_cnt.items():
+                cnt[k] = cnt.get(k, 0) + v
+    else:
+        by, cnt = walk(entry)
+    return CollectiveStats(by, cnt, sum(by.values()))
+
+
+def top_collectives(hlo: str, k: int = 12, default_group: int = 16):
+    """Largest collective contributors: (kind, weighted bytes, result type,
+    count) — while-loop trip counts applied.  The §Perf iteration loop's
+    'profile'."""
+    comps = _split_computations(hlo)
+    # compute trip multiplier for each computation reachable from entry
+    mult: Dict[str, int] = {}
+
+    def walk(name: str, m: int):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = max(mult.get(name, 0), m)
+        for line in comps.get(name, ()):
+            wm = _WHILE_RE.search(line)
+            if wm:
+                trips = _trip_count(comps.get(wm.group(1), []))
+                walk(wm.group(2), m * trips)
+            cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+            if cm and cm.group(1) in comps:
+                walk(cm.group(1), m)
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            entry = m.group(1) if m else None
+            break
+    if entry:
+        walk(entry, 1)
+    agg: Dict[tuple, list] = {}
+    for name, m in mult.items():
+        for line in comps.get(name, ()):
+            cm = _COLLECTIVE_RE.search(line)
+            if not cm or "-done(" in line:
+                continue
+            ty = cm.group(1) or cm.group(2)
+            kind = cm.group(3)
+            n = _group_size(line, default_group)
+            b = shape_bytes(ty) * _FACTORS[kind](n) * m
+            key = (kind, ty)
+            if key not in agg:
+                agg[key] = [0.0, 0]
+            agg[key][0] += b
+            agg[key][1] += m
+    rows = sorted(((kind, v[0], ty, v[1]) for (kind, ty), v in agg.items()),
+                  key=lambda r: -r[1])
+    return rows[:k]
+
+
+def while_trip_counts(hlo: str) -> Dict[str, int]:
+    """body-computation -> trip count, for FLOP rescaling."""
+    comps = _split_computations(hlo)
+    out = {}
+    for lines in comps.values():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                out[wm.group(2)] = _trip_count(comps.get(wm.group(1), []))
+    return out
+
+
+# ---------------------------------------------------------------- FLOPs
+#
+# XLA's HloCostAnalysis (exposed via compiled.cost_analysis()) does NOT
+# multiply while-loop bodies by their trip count, so any scanned-layer model
+# is undercounted by ~num_layers.  We therefore count dot FLOPs and dot
+# operand/result HBM bytes ourselves, with while multipliers.  Dots dominate
+# transformer FLOPs; elementwise ops are ignored for FLOPs but approximated
+# for bytes via instruction result sizes.
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+(\S+?)\(")
+_DOT_PAREN_RE = re.compile(r"(?:dot|convolution)\(([^)]*)\)")
+_NAME_REF_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+
+
+def _shape_dims(type_str: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", ()
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float            # dot/conv FLOPs, while-weighted, per device
+    dot_bytes: float        # dot operand+result bytes, while-weighted
+    instr_bytes: float      # all instruction result bytes, while-weighted
+
+
+def hlo_stats(hlo: str) -> HloStats:
+    comps = _split_computations(hlo)
+    memo: Dict[str, Tuple[float, float, float]] = {}
+
+    def walk(name: str) -> Tuple[float, float, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, 0.0, 0.0)
+        flops = dot_b = instr_b = 0.0
+        symtab: Dict[str, str] = {}
+        lines = comps.get(name, ())
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if im:
+                symtab[im.group(1)] = im.group(2)
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            res_type = im.group(2)
+            op = im.group(3)
+            instr_b += shape_bytes(res_type)
+            if op in ("dot", "convolution"):
+                dm = _DOT_PAREN_RE.search(line)
+                lm = _LHS_C_RE.search(line)
+                if dm:
+                    names = _NAME_REF_RE.findall(dm.group(1))
+                    lhs_type = symtab.get(names[0], "") if names else ""
+                    rhs_type = symtab.get(names[1], "") if len(names) > 1 else ""
+                    _, lhs_dims = _shape_dims(lhs_type)
+                    k = 1
+                    if lm is not None:
+                        cdims = [int(x) for x in lm.group(1).split(",") if x]
+                        for c in cdims:
+                            if c < len(lhs_dims):
+                                k *= lhs_dims[c]
+                    _, res_dims = _shape_dims(res_type)
+                    out_n = 1
+                    for d in res_dims:
+                        out_n *= d
+                    flops += 2.0 * out_n * k
+                    dot_b += (shape_bytes(lhs_type) + shape_bytes(rhs_type)
+                              + shape_bytes(res_type))
+            wm = _WHILE_RE.search(line)
+            if wm:
+                trips = _trip_count(comps.get(wm.group(1), []))
+                f, db, ib = walk(wm.group(2))
+                flops += trips * f
+                dot_b += trips * db
+                instr_b += trips * ib
+            else:
+                cm = _CALLS_RE.search(line) or _TO_APPLY_RE.search(line)
+                if cm and cm.group(1) in comps:
+                    f, db, ib = walk(cm.group(1))
+                    flops += f
+                    dot_b += db
+                    instr_b += ib
+        memo[name] = (flops, dot_b, instr_b)
+        return memo[name]
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry and entry in comps:
+        f, db, ib = walk(entry)
+    else:
+        f = db = ib = 0.0
+        for name in comps:
+            ff, dd, ii = walk(name)
+            f, db, ib = f + ff, db + dd, ib + ii
+    return HloStats(f, db, ib)

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: BFRT bucketed histogram (paper App. C.3, procedure 2).
+
+The Bound-Flipping Ratio Test walks breakpoints in increasing ratio order
+until the flip budget |delta| is exhausted.  The paper parallelises this
+with Map-Sort + per-core heaps; neither global sorts nor heaps map to the
+TPU's vector units, so we use the TPU idiom instead (same trick as TPU
+top-k): a two-pass *bucketed select*:
+
+  pass 1 (this kernel): histogram the breakpoint ratios into NB buckets,
+     accumulating per-bucket flip-cost sums and counts — one-hot comparisons
+     against the bucket edges, reduced with an MXU matmul, accumulated into
+     a VMEM scratch across the sequential grid;
+  pass 2 (ops.py): a scalar cumsum over NB buckets locates the crossing
+     bucket; only that bucket's elements (tiny) are resolved exactly.
+
+Output matches the sequential BFRT exactly (tests sweep shapes/dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048
+NUM_BUCKETS = 128
+
+
+def _bfrt_hist_kernel(ratio_ref, cost_ref, edges_ref,
+                      sums_ref, counts_ref):
+    i = pl.program_id(0)
+    ratio = ratio_ref[...]               # (1, B)
+    cost = cost_ref[...]                 # (1, B)
+    edges = edges_ref[...]               # (1, NB) upper edges
+
+    # bucket_j = first b with ratio <= edges[b]; one-hot via adjacent diff
+    le = (ratio[0, :, None] <= edges[0, None, :]).astype(cost.dtype)  # (B, NB)
+    onehot = le - jnp.concatenate(
+        [jnp.zeros((le.shape[0], 1), le.dtype), le[:, :-1]], axis=1)
+    finite = jnp.isfinite(ratio[0])[:, None].astype(cost.dtype)
+    onehot = onehot * finite
+    sums = jnp.dot(cost, onehot, preferred_element_type=jnp.float32)   # (1, NB)
+    counts = jnp.dot(jnp.ones_like(cost), onehot * finite,
+                     preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += sums.astype(sums_ref.dtype)
+    counts_ref[...] += counts.astype(counts_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "num_buckets", "interpret"))
+def bfrt_histogram(ratio, cost, edges, *, block: int = DEFAULT_BLOCK,
+                   num_buckets: int = NUM_BUCKETS, interpret: bool = True):
+    """Pass 1: (per-bucket flip-cost sums, counts).
+
+    ratio/cost: (n,); edges: (num_buckets,) ascending upper edges with
+    edges[-1] = +inf so every finite ratio lands in a bucket.
+    """
+    n = ratio.shape[0]
+    dt = cost.dtype
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        ratio = jnp.pad(ratio, (0, pad), constant_values=jnp.inf)
+        cost = jnp.pad(cost, (0, pad))
+    npad = ratio.shape[0]
+    grid = (npad // block,)
+    sums, counts = pl.pallas_call(
+        _bfrt_hist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, num_buckets), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, num_buckets), lambda i: (0, 0)),
+            pl.BlockSpec((1, num_buckets), lambda i: (0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1, num_buckets), jnp.float32)] * 2,
+        interpret=interpret,
+    )(ratio.reshape(1, npad), cost.reshape(1, npad),
+      edges.reshape(1, num_buckets))
+    return sums[0], counts[0]
+
+
+def bfrt_select(ratio, cost, budget, *, num_buckets: int = NUM_BUCKETS,
+                interpret: bool = True):
+    """Full two-pass BFRT: returns (entering index, flip mask).
+
+    Equivalent to: sort eligible by ratio; flip until cumulative cost
+    reaches budget; the crossing element enters the basis.
+    Assumes ineligible entries have ratio=inf / cost=0 (pricing kernel).
+    """
+    finite = jnp.isfinite(ratio)
+    any_elig = jnp.any(finite)
+    rmax = jnp.max(jnp.where(finite, ratio, 0.0))
+    rmin = jnp.min(jnp.where(finite, ratio, rmax))
+    # NB-2 interior edges + final +inf edge; epsilon-widened
+    span = jnp.maximum(rmax - rmin, 1e-12)
+    interior = rmin + span * (jnp.arange(1, num_buckets) / (num_buckets - 1))
+    edges = jnp.concatenate([interior, jnp.array([jnp.inf], ratio.dtype)])
+    sums, _ = bfrt_histogram(ratio, cost, edges, num_buckets=num_buckets,
+                             interpret=interpret)
+    csum = jnp.cumsum(sums)
+    # crossing bucket: first whose cumulative cost reaches the budget
+    crossed = csum >= budget - 1e-12
+    bidx = jnp.argmax(crossed)
+    has_cross = jnp.any(crossed)
+    lo_edge = jnp.where(bidx == 0, -jnp.inf, edges[jnp.maximum(bidx - 1, 0)])
+    hi_edge = edges[bidx]
+    base = jnp.where(bidx == 0, 0.0, csum[jnp.maximum(bidx - 1, 0)])
+
+    # pass 2: exact walk inside the crossing bucket (tiny, jnp sort)
+    in_bucket = (ratio > lo_edge) & (ratio <= hi_edge) & finite
+    r_in = jnp.where(in_bucket, ratio, jnp.inf)
+    order = jnp.argsort(r_in)
+    cost_sorted = cost[order] * jnp.isfinite(r_in[order])
+    csum_in = base + jnp.cumsum(cost_sorted)
+    cross_pos = jnp.argmax((csum_in >= budget - 1e-12)
+                           & jnp.isfinite(r_in[order]))
+    q = order[cross_pos]
+    # flips: every eligible entry with ratio strictly below the entering one
+    # plus earlier same-bucket entries (by sorted position)
+    rank = jnp.empty_like(order).at[order].set(jnp.arange(ratio.shape[0]))
+    flips = finite & ((ratio < ratio[q]) | (in_bucket & (rank < rank[q])))
+    flips = flips & (jnp.arange(ratio.shape[0]) != q)
+    return q, flips, has_cross & any_elig

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) so the kernel bodies
+execute in Python for correctness; on a real TPU backend pass
+``interpret=False`` (the wrappers pick this automatically from the default
+device platform).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import flash_attention
+from repro.kernels.bfrt import bfrt_histogram, bfrt_select
+from repro.kernels.pricing import pricing
+from repro.kernels.segstats import segment_stats, segstats_partials
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def auto_interpret() -> bool:
+    return not on_tpu()
+
+
+def pricing_op(A, rho, y, c, state, lo, hi, s, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return pricing(A, rho, y, c, state, lo, hi, s, **kw)
+
+
+def bfrt_select_op(ratio, cost, budget, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return bfrt_select(ratio, cost, budget, **kw)
+
+
+def segment_stats_op(vals, ids, num_groups, **kw):
+    kw.setdefault("interpret", auto_interpret())
+    return segment_stats(vals, ids, num_groups, **kw)
+
+
+def flash_attention_op(q, k, v, *, num_kv_heads=None, **kw):
+    """q: (B, S, H, d); k/v: (B, S, KV, d).  GQA expansion then kernel."""
+    kw.setdefault("interpret", auto_interpret())
+    B, S, H, d = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    o = flash_attention(qf, kf, vf, **kw)
+    return o.reshape(B, H, S, d).transpose(0, 2, 1, 3)
+
+
+__all__ = ["pricing_op", "bfrt_select_op", "segment_stats_op",
+           "flash_attention_op", "bfrt_histogram", "segstats_partials",
+           "on_tpu", "auto_interpret"]

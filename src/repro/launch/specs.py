@@ -1,0 +1,161 @@
+"""Per-cell (arch × shape × mesh) abstract inputs, step fns and shardings.
+
+``input_specs`` produces weak-type-correct ``jax.ShapeDtypeStruct`` stand-ins
+for every model input — no device allocation — exactly what
+``jax.jit(...).lower()`` needs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeConfig, get_config, SHAPES
+from repro.distributed.context import use_rules
+from repro.distributed.sharding import ShardingRules, make_rules
+
+import os
+# §Perf iterations 2-5: contraction-aligned decode activations (default on;
+# set =0 to reproduce the paper-faithful baseline numbers)
+_REPL_DECODE = os.environ.get("REPRO_DECODE_REPLICATED_ACT", "1") == "1"
+# §Perf smollm iteration: sequence-parallel attention when heads don't
+# divide the model axis
+_SEQ_PAR = os.environ.get("REPRO_SEQ_PARALLEL_ATTN", "0") == "1"
+
+from repro.models import Model
+from repro.training.step import abstract_train_state, make_train_step
+
+
+def _with_rules(fn, rules):
+    """Activate the sharding-rules context while tracing fn."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with use_rules(rules):
+            return fn(*args)
+    return wrapped
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, *, with_labels: bool):
+    """Abstract batch + pspecs for train/prefill inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    s_tokens = S - cfg.num_prefix_tokens if cfg.num_prefix_tokens else S
+    batch = {"tokens": _sds((B, s_tokens), jnp.int32)}
+    specs = {"tokens": P("__dp__", None)}
+    if with_labels:
+        batch["labels"] = _sds((B, s_tokens), jnp.int32)
+        specs["labels"] = P("__dp__", None)
+    if cfg.is_encoder_decoder:
+        batch["enc_inputs"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                   jnp.bfloat16)
+        specs["enc_inputs"] = P("__dp__", None, None)
+    if cfg.num_prefix_tokens:
+        batch["prefix"] = _sds((B, cfg.num_prefix_tokens, cfg.d_model),
+                               jnp.bfloat16)
+        specs["prefix"] = P("__dp__", None, None)
+    return batch, specs
+
+
+def _resolve_dp(pspec: P, rules: ShardingRules, batch_size: int) -> P:
+    """Replace the '__dp__' placeholder with the actual dp entry."""
+    entry = rules._dp_entry(batch_size)
+    return P(*[entry if e == "__dp__" else e for e in pspec])
+
+
+def _cache_kind(key: str) -> Optional[str]:
+    if key in ("k", "v", "xk", "xv"):
+        return "kv"
+    if key in ("c", "r"):
+        return "mla"
+    if key.startswith("state"):
+        return "state"
+    if key.startswith("conv"):
+        return "conv"
+    return None  # index
+
+
+def cache_shardings(cache_abstract, rules: ShardingRules):
+    out = {}
+    for key, v in cache_abstract.items():
+        kind = _cache_kind(key)
+        if kind is None:
+            out[key] = rules.named(P())
+        else:
+            out[key] = rules.named(rules.cache_pspec(v.shape, kind))
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = make_rules(mesh)
+    if SHAPES[shape_name].kind == "decode" and _REPL_DECODE:
+        rules = dataclasses.replace(rules, replicate_decode_activations=True)
+    if _SEQ_PAR:
+        rules = dataclasses.replace(rules, seq_parallel_attn=True)
+    model = Model(cfg)
+    axes = model.axes()
+
+    if shape.kind == "train":
+        state = abstract_train_state(model)
+        p_shard = rules.param_sharding(model.abstract_params(), axes)
+        state_shard = {
+            "params": p_shard,
+            "opt": {"mu": p_shard, "nu": p_shard,
+                    "step": rules.named(P())},
+        }
+        batch, bspecs = batch_specs(cfg, shape, with_labels=True)
+        bshard = {k: rules.named(_resolve_dp(v, rules, shape.global_batch))
+                  for k, v in bspecs.items()}
+        step = _with_rules(make_train_step(model), rules)
+        metrics_shard = None  # replicated scalars
+        return Cell(arch, shape_name, step, (state, batch),
+                    (state_shard, bshard), (state_shard, metrics_shard),
+                    donate_argnums=(0,))
+
+    params = model.abstract_params()
+    p_shard = rules.param_sharding(params, axes)
+
+    if shape.kind == "prefill":
+        batch, bspecs = batch_specs(cfg, shape, with_labels=False)
+        bshard = {k: rules.named(_resolve_dp(v, rules, shape.global_batch))
+                  for k, v in bspecs.items()}
+        fn = _with_rules(lambda p, b: model.prefill_logits(p, b), rules)
+        V = cfg.padded_vocab
+        out_spec = P(rules._dp_entry(shape.global_batch), None,
+                     "model" if V % rules.tp_size == 0 else None)
+        return Cell(arch, shape_name, fn, (params, batch),
+                    (p_shard, bshard), rules.named(out_spec))
+
+    # decode: one new token against a cache of shape.seq_len
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.init_cache(B, S, abstract=True)
+    c_shard = cache_shardings(cache, rules)
+    tokens = _sds((B, 1), jnp.int32)
+    t_shard = rules.named(P(rules._dp_entry(B), None))
+    fn = _with_rules(lambda p, c, t: model.decode_step(p, c, t), rules)
+    V = cfg.padded_vocab
+    logits_shard = rules.named(
+        P(rules._dp_entry(B), "model" if V % rules.tp_size == 0 else None))
+    return Cell(arch, shape_name, fn, (params, cache, tokens),
+                (p_shard, c_shard, t_shard), (logits_shard, c_shard),
+                donate_argnums=(1,))

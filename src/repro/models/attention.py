@@ -1,0 +1,277 @@
+"""Attention: GQA (full / sliding-window / prefix-LM) and MLA (DeepSeek).
+
+Training/prefill attention is *chunked online-softmax* (flash-style) over KV
+blocks via ``lax.scan`` so that 32k-token prefill never materialises an
+(S, S) score matrix — this is the pure-XLA analogue of the Pallas kernel in
+``repro.kernels.attention`` (used where TPU lowering is available; the scan
+form is what the multi-pod dry-run lowers).
+
+Decode attends a single query over the cache; MLA decode uses the *absorbed*
+formulation (scores in latent space) so per-token FLOPs stay O(S·c) instead
+of re-expanding the latent cache to per-head K/V.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import constrain
+from repro.models.param import ParamInfo
+from repro.models.layers import apply_norm, rope
+
+NEG_INF = -2.0e38
+
+# ===================================================================== GQA
+
+
+def gqa_spec(cfg: ArchConfig) -> Dict[str, ParamInfo]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    spec = {
+        "wq": ParamInfo((d, h, hd), ("embed", "heads", "head")),
+        "wk": ParamInfo((d, kv, hd), ("embed", "kv_heads", "head")),
+        "wv": ParamInfo((d, kv, hd), ("embed", "kv_heads", "head")),
+        "wo": ParamInfo((h, hd, d), ("heads", "head", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamInfo((h, hd), ("heads", "head"), init="zeros")
+        spec["bk"] = ParamInfo((kv, hd), ("kv_heads", "head"), init="zeros")
+        spec["bv"] = ParamInfo((kv, hd), ("kv_heads", "head"), init="zeros")
+    return spec
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int, prefix_len) -> jax.Array:
+    """(..., Sq, Sk) boolean mask. True = attend."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m = qp >= kp
+    if window > 0:
+        m = jnp.logical_and(m, (qp - kp) < window)
+    if prefix_len is not None:
+        pl = prefix_len if jnp.ndim(prefix_len) == 0 else prefix_len[..., None, None]
+        m = jnp.logical_or(m, kp < pl)  # full attention inside the prefix
+    return m
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array, *,
+                      causal: bool, window: int = 0,
+                      prefix_len=None, chunk: int = 1024,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Online-softmax attention, scanning over KV chunks.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, hdv = v.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    groups = H // KV
+    qg = q.reshape(B, Sq, KV, groups, hd).astype(jnp.float32) * scale
+
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, pad),), constant_values=jnp.iinfo(jnp.int32).max)
+    n_chunks = k.shape[1] // chunk
+    kc = k.reshape(B, n_chunks, chunk, KV, hd).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, KV, hdv).swapaxes(0, 1)
+    pc = k_pos.reshape(n_chunks, chunk)
+
+    def step(carry, inp):
+        m_run, l_run, o_run = carry
+        k_i, v_i, p_i = inp
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k_i.astype(jnp.float32))
+        msk = _mask(q_pos, p_i, causal=causal, window=window,
+                    prefix_len=prefix_len)          # (Sq, chunk)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        o_new = o_run * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    m0 = constrain(jnp.full((B, Sq, KV, groups), NEG_INF, jnp.float32),
+                   ("dp", None, None, None))
+    l0 = constrain(jnp.zeros((B, Sq, KV, groups), jnp.float32),
+                   ("dp", None, None, None))
+    o0 = constrain(jnp.zeros((B, Sq, KV, groups, hdv), jnp.float32),
+                   ("dp", None, None, None, None))
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, pc))
+    o = o / jnp.maximum(l[..., None], 1e-37)
+    return o.reshape(B, Sq, H, hdv).astype(q.dtype)
+
+
+def gqa_forward(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array, *,
+                causal: bool = True, prefix_len=None,
+                kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if kv_override is None:
+        k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+    else:
+        k, v = kv_override
+        k_pos = kv_positions
+    q = rope(q, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, positions, k_pos, causal=causal,
+                          window=cfg.sliding_window if causal else 0,
+                          prefix_len=prefix_len)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+
+
+def gqa_project_kv(p, x: jax.Array, positions: jax.Array,
+                   theta: float) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return rope(k, positions, theta), v
+
+
+def gqa_decode(p, cfg: ArchConfig, x: jax.Array, k_cache: jax.Array,
+               v_cache: jax.Array, index: jax.Array,
+               window: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, D); caches: (B, S_cache, KV, hd).
+
+    ``index`` is the absolute position of the new token; with a rolling
+    (sliding-window) cache S_cache = window and slot = index % window.
+    """
+    B, _, _ = x.shape
+    S_cache = k_cache.shape[1]
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = rope(q, pos, cfg.rope_theta)
+    k_new = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v_new = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if "bk" in p:
+        k_new, v_new = k_new + p["bk"], v_new + p["bv"]
+    k_new = rope(k_new, pos, cfg.rope_theta)
+    slot = index % S_cache if window else jnp.minimum(index, S_cache - 1)
+    zero = jnp.zeros((), jnp.int32)
+    slot32 = jnp.asarray(slot, jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype),
+                                           (zero, slot32, zero, zero))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype),
+                                           (zero, slot32, zero, zero))
+    # positions held in each cache slot
+    slots = jnp.arange(S_cache, dtype=jnp.int32)
+    if window:
+        # slot s holds the most recent position p with p % window == s, p <= index
+        cache_pos = index - (index - slots) % S_cache
+        valid = ((index - cache_pos) < window) & (cache_pos >= 0)
+    else:
+        cache_pos = slots
+        valid = slots <= index
+
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    groups = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, groups, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgh,bckh->bkgc", qg, k_cache.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", w, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, H, hd).astype(x.dtype)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"]), k_cache, v_cache
+
+
+# ===================================================================== MLA
+
+
+def mla_spec(cfg: ArchConfig) -> Dict[str, ParamInfo]:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rp, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamInfo((d, qr), ("embed", "qlora")),
+        "q_norm": {"scale": ParamInfo((qr,), ("qlora",), init="ones")},
+        "wq_b": ParamInfo((qr, h, nope + rp), ("qlora", "heads", "head")),
+        "wkv_a": ParamInfo((d, kvr), ("embed", "kvlora")),
+        "wk_rope": ParamInfo((d, rp), ("embed", "head")),
+        "kv_norm": {"scale": ParamInfo((kvr,), ("kvlora",), init="ones")},
+        "wk_b": ParamInfo((kvr, h, nope), ("kvlora", "heads", "head")),
+        "wv_b": ParamInfo((kvr, h, vh), ("kvlora", "heads", "head")),
+        "wo": ParamInfo((h, vh, d), ("heads", "head", "embed"), init="scaled"),
+    }
+
+
+def _mla_qkr(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    """Shared q / latent / rope-key computation. x: (B, S, D)."""
+    nope, rp = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_lat = apply_norm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["wq_a"]),
+                       cfg.norm_eps)
+    q = jnp.einsum("bsr,rnh->bsnh", q_lat, p["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    c_kv = apply_norm(p["kv_norm"], jnp.einsum("bsd,dr->bsr", x, p["wkv_a"]),
+                      cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wk_rope"])[:, :, None, :]
+    k_rope = rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array) -> jax.Array:
+    """Training/prefill MLA: expand latent to per-head K/V, chunked attention."""
+    nope, rp, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rnh->bsnh", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rnh->bsnh", c_kv, p["wv_b"])
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:-1] + (rp,))], axis=-1)
+    scale = 1.0 / math.sqrt(nope + rp)
+    o = chunked_attention(q_full, k_full, v, positions, positions,
+                          causal=True, scale=scale)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+
+
+def mla_decode(p, cfg: ArchConfig, x: jax.Array, c_cache: jax.Array,
+               r_cache: jax.Array, index: jax.Array):
+    """Absorbed-form MLA decode.
+
+    c_cache: (B, S, kv_lora) latent cache; r_cache: (B, S, rope_dim).
+    Scores are computed in latent space: q_eff = q_nope @ wk_b  (per head),
+    out_latent re-projected through wv_b — never materialises per-head K/V.
+    """
+    nope, rp, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    B = x.shape[0]
+    S_cache = c_cache.shape[1]
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q_nope, q_rope, c_new, r_new = _mla_qkr(p, cfg, x, pos)
+    zero = jnp.zeros((), jnp.int32)
+    idx32 = jnp.asarray(index, jnp.int32)
+    c_cache = jax.lax.dynamic_update_slice(c_cache, c_new.astype(c_cache.dtype),
+                                           (zero, idx32, zero))
+    r_cache = jax.lax.dynamic_update_slice(r_cache, r_new.astype(r_cache.dtype),
+                                           (zero, idx32, zero))
+    q_eff = jnp.einsum("bsnh,rnh->bsnr", q_nope, p["wk_b"])  # (B,1,H,kv_lora)
+    scale = 1.0 / math.sqrt(nope + rp)
+    s = (jnp.einsum("bsnr,bcr->bnc", q_eff, c_cache.astype(q_eff.dtype))
+         + jnp.einsum("bsnr,bcr->bnc", q_rope, r_cache.astype(q_rope.dtype)))
+    s = s.astype(jnp.float32) * scale
+    valid = jnp.arange(S_cache) <= index
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bnc,bcr->bnr", w.astype(c_cache.dtype), c_cache)
+    o = jnp.einsum("bnr,rnh->bnh", ctx, p["wv_b"])[:, None]  # (B,1,H,vh)
+    return jnp.einsum("bsnh,nhd->bsd", o.astype(x.dtype), p["wo"]), c_cache, r_cache

@@ -1,0 +1,115 @@
+"""Shared neural layers: norms, MLPs, embeddings, rotary/sinusoidal positions.
+
+All ``*_spec`` functions return nested dicts of ParamInfo; all ``apply``
+functions are pure jnp on the matching params tree.  Compute dtype follows
+the input; normalisation and softmax accumulate in f32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.param import ParamInfo
+
+# ----------------------------------------------------------------- norms
+
+
+def norm_spec(cfg: ArchConfig, d: Optional[int] = None) -> Dict[str, ParamInfo]:
+    d = d or cfg.d_model
+    spec = {"scale": ParamInfo((d,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        spec["bias"] = ParamInfo((d,), ("embed",), init="zeros")
+    return spec
+
+
+def apply_norm(p, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ----------------------------------------------------------------- MLP
+
+
+def mlp_spec(cfg: ArchConfig, d_ff: int) -> Dict[str, ParamInfo]:
+    d = cfg.d_model
+    if cfg.act == "silu":  # SwiGLU
+        return {
+            "wi": ParamInfo((d, d_ff), ("embed", "mlp")),
+            "wg": ParamInfo((d, d_ff), ("embed", "mlp")),
+            "wo": ParamInfo((d_ff, d), ("mlp", "embed"), init="scaled"),
+        }
+    return {
+        "wi": ParamInfo((d, d_ff), ("embed", "mlp")),
+        "wo": ParamInfo((d_ff, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def apply_mlp(p, x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if act == "silu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ----------------------------------------------------------------- embeddings
+
+
+def embedding_spec(cfg: ArchConfig) -> Dict[str, ParamInfo]:
+    spec = {"embedding": ParamInfo((cfg.padded_vocab, cfg.d_model),
+                                   ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        spec["head"] = ParamInfo((cfg.d_model, cfg.padded_vocab),
+                                 ("embed", "vocab"))
+    return spec
+
+
+def embed_tokens(p, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["embedding"].astype(dtype), tokens, axis=0)
+
+
+def logits_from(p, x: jax.Array) -> jax.Array:
+    if "head" in p:
+        return jnp.einsum("...d,dv->...v", x, p["head"])
+    return jnp.einsum("...d,vd->...v", x, p["embedding"])
+
+
+# ----------------------------------------------------------------- positions
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, head_dim), positions: (..., S)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe[:, :d].astype(dtype)

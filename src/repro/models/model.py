@@ -1,0 +1,450 @@
+"""Top-level model API, driven entirely by ArchConfig.
+
+  model = Model(cfg)
+  spec   = model.spec()                      # ParamInfo tree (+ logical axes)
+  params = model.init(rng)                   # concrete init (smoke/small)
+  loss, metrics = model.loss_fn(params, batch)
+  logits = model.prefill_logits(params, batch)          # parallel prefill
+  cache  = model.init_cache(batch_size, cache_len)      # decode state
+  logits, cache = model.decode_step(params, cache, tokens, index)
+
+Batches are dicts: tokens/labels (B, S) int32 (labels -1 = ignore), plus
+``enc_inputs`` (audio stub frame embeddings) or ``prefix`` (VLM patch
+embeddings) where the family requires them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import (constrain, constrain_cache,
+                                        constrain_decode_act)
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.layers import (apply_norm, embed_tokens, embedding_spec,
+                                 logits_from, norm_spec, sinusoidal_positions)
+from repro.models.param import (ParamInfo, abstract_params, axes_tree,
+                                init_params, param_count, stacked)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params
+    def spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"embed": embedding_spec(cfg),
+                             "ln_f": norm_spec(cfg)}
+        s["decoder"] = tfm.decoder_spec(cfg)
+        if cfg.is_encoder_decoder:
+            s["encoder"] = tfm.encoder_spec(cfg)
+            s["decoder"] = tfm.xdecoder_spec(cfg)
+        if cfg.mtp_depth:
+            s["mtp"] = {
+                "proj": ParamInfo((2 * cfg.d_model, cfg.d_model),
+                                  ("embed", "embed")),
+                "ln": norm_spec(cfg),
+                "block": tfm.attn_block_spec(cfg, use_moe=False,
+                                             d_ff=cfg.d_ff or cfg.moe_d_ff),
+            }
+        return s
+
+    def axes(self):
+        return axes_tree(self.spec())
+
+    def abstract_params(self):
+        return abstract_params(self.spec(), _dtype(self.cfg))
+
+    def init(self, rng: jax.Array):
+        return init_params(self.spec(), rng, _dtype(self.cfg))
+
+    def param_count(self) -> int:
+        return param_count(self.spec())
+
+    # ----------------------------------------------------------- forward
+    def _embed_sequence(self, params, batch) -> Tuple[jax.Array, jax.Array, Any]:
+        """Returns (x, positions, prefix_len)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], _dtype(cfg))
+        prefix_len = None
+        if cfg.num_prefix_tokens:
+            x = jnp.concatenate([batch["prefix"].astype(x.dtype), x], axis=1)
+            prefix_len = cfg.num_prefix_tokens
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        if cfg.rope_theta <= 0 and not cfg.is_ssm and not cfg.is_hybrid:
+            x = x + sinusoidal_positions(S, cfg.d_model, x.dtype)[None]
+        x = constrain(x, ("dp", None, None))
+        return x, positions, prefix_len
+
+    def hidden_states(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Final-norm hidden states + aux (router) loss."""
+        cfg = self.cfg
+        x, positions, prefix_len = self._embed_sequence(params, batch)
+        if cfg.is_encoder_decoder:
+            enc = tfm.apply_encoder(params["encoder"], cfg,
+                                    batch["enc_inputs"].astype(x.dtype))
+            x = tfm.apply_xdecoder(params["decoder"], cfg, x, positions, enc)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            x, aux = tfm.apply_decoder(params["decoder"], cfg, x, positions,
+                                       prefix_len=prefix_len)
+        return apply_norm(params["ln_f"], x, cfg.norm_eps), aux
+
+    def prefill_logits(self, params, batch) -> jax.Array:
+        h, _ = self.hidden_states(params, batch)
+        return logits_from(params["embed"], h).astype(jnp.float32)
+
+    # -------------------------------------------------------------- loss
+    def loss_fn(self, params, batch, ce_chunk: int = 1024):
+        cfg = self.cfg
+        h, aux = self.hidden_states(params, batch)
+        if cfg.num_prefix_tokens:            # loss only on text positions
+            h = h[:, cfg.num_prefix_tokens:]
+        labels = batch["labels"]
+        loss, denom = _chunked_ce(params["embed"], h, labels, ce_chunk)
+        metrics = {"ce": loss / jnp.maximum(denom, 1.0),
+                   "aux": aux, "tokens": denom}
+        total = loss / jnp.maximum(denom, 1.0) + 0.01 * aux
+        if cfg.mtp_depth:
+            mtp_loss = self._mtp_loss(params, h, batch, ce_chunk)
+            total = total + 0.3 * mtp_loss
+            metrics["mtp"] = mtp_loss
+        return total, metrics
+
+    def _mtp_loss(self, params, h, batch, ce_chunk):
+        """DeepSeek-V3 multi-token prediction: predict t+2 from
+        [h_t ; emb(token_{t+1})] through one extra block."""
+        cfg = self.cfg
+        p = params["mtp"]
+        emb_next = embed_tokens(params["embed"], batch["tokens"][:, 1:],
+                                h.dtype)
+        z = jnp.concatenate([apply_norm(p["ln"], h[:, :-1], cfg.norm_eps),
+                             emb_next], axis=-1)
+        z = jnp.einsum("bsd,de->bse", z, p["proj"])
+        positions = jnp.arange(z.shape[1], dtype=jnp.int32)
+        z, _ = tfm.apply_attn_block(p["block"], cfg, z, positions,
+                                    use_moe=False)
+        mtp_labels = jnp.pad(batch["labels"][:, 2:], ((0, 0), (0, 1)),
+                             constant_values=-1)
+        loss, denom = _chunked_ce(params["embed"], z, mtp_labels, ce_chunk)
+        return loss / jnp.maximum(denom, 1.0)
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch_size: int, cache_len: int,
+                   enc_len: Optional[int] = None, abstract: bool = False):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        mk = (lambda shape, d: jax.ShapeDtypeStruct(shape, d)) if abstract \
+            else (lambda shape, d: jnp.zeros(shape, d))
+        kv_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+            else cache_len
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache: Dict[str, Any] = {"index": mk((), jnp.int32)}
+
+        if cfg.family == "ssm":
+            L = cfg.num_layers
+            cache["state"] = mk((L, batch_size, cfg.ssm_heads, cfg.ssm_state,
+                                 cfg.ssm_head_dim), jnp.float32)
+            cache["conv"] = mk((L, batch_size, cfg.ssm_conv - 1,
+                                cfg.d_inner + 2 * cfg.ssm_state), dt)
+            return cache
+        if cfg.is_hybrid:
+            nb = cfg.num_layers // cfg.attn_period
+            cache["k"] = mk((nb, batch_size, kv_len, KV, hd), dt)
+            cache["v"] = mk((nb, batch_size, kv_len, KV, hd), dt)
+            for i in range(cfg.attn_period):
+                if i == cfg.attn_period // 2:
+                    continue
+                cache[f"state{i}"] = mk((nb, batch_size, cfg.ssm_heads,
+                                         cfg.ssm_state, cfg.ssm_head_dim),
+                                        jnp.float32)
+                cache[f"conv{i}"] = mk((nb, batch_size, cfg.ssm_conv - 1,
+                                        cfg.d_inner + 2 * cfg.ssm_state), dt)
+            return cache
+        if cfg.attention == "mla":
+            L = cfg.num_layers
+            cache["c"] = mk((L, batch_size, kv_len, cfg.kv_lora_rank), dt)
+            cache["r"] = mk((L, batch_size, kv_len, cfg.qk_rope_head_dim), dt)
+            return cache
+        # GQA families (dense / moe / audio / vlm)
+        L = cfg.num_layers
+        cache["k"] = mk((L, batch_size, kv_len, KV, hd), dt)
+        cache["v"] = mk((L, batch_size, kv_len, KV, hd), dt)
+        if cfg.is_encoder_decoder:
+            el = enc_len or cfg.encoder_seq_len
+            cache["xk"] = mk((L, batch_size, el, KV, hd), dt)
+            cache["xv"] = mk((L, batch_size, el, KV, hd), dt)
+        return cache
+
+    def decode_step(self, params, cache, tokens, index=None):
+        """tokens: (B, 1) int32.  Returns (logits (B, V) f32, new cache)."""
+        cfg = self.cfg
+        index = cache["index"] if index is None else index
+        x = embed_tokens(params["embed"], tokens, _dtype(cfg))
+        if cfg.rope_theta <= 0 and not cfg.is_ssm and not cfg.is_hybrid:
+            pe = sinusoidal_positions(1 << 16, cfg.d_model, x.dtype)
+            x = x + jax.lax.dynamic_slice_in_dim(pe, index, 1, axis=0)[None]
+
+        new_cache = dict(cache)
+        if cfg.family == "ssm":
+            x, new_cache = self._decode_ssm(params, cache, x, index)
+        elif cfg.is_hybrid:
+            x, new_cache = self._decode_hybrid(params, cache, x, index)
+        elif cfg.attention == "mla":
+            x, new_cache = self._decode_mla(params, cache, x, index)
+        else:
+            x, new_cache = self._decode_gqa(params, cache, x, index)
+        new_cache["index"] = index + 1
+        h = apply_norm(params["ln_f"], x, cfg.norm_eps)
+        logits = logits_from(params["embed"], h)[:, 0].astype(jnp.float32)
+        return logits, new_cache
+
+    # -- per-family decode bodies (scan over stacked layers + caches) ----
+    def _decode_gqa(self, params, cache, x, index):
+        cfg = self.cfg
+        dec = params["decoder"]
+        window = cfg.sliding_window
+
+        def body(carry, inp):
+            h = constrain_decode_act(carry)
+            if cfg.is_encoder_decoder:
+                lp, k, v, xk, xv = inp
+            else:
+                lp, k, v = inp
+            k = constrain_cache(k, "kv")
+            v = constrain_cache(v, "kv")
+            a = apply_norm(lp["ln1"], h, cfg.norm_eps)
+            a, k, v = attn.gqa_decode(lp["attn"], cfg, a, k, v, index,
+                                      window=window)
+            h = h + a
+            if cfg.is_encoder_decoder:
+                a = apply_norm(lp["ln_x"], h, cfg.norm_eps)
+                a = _cross_decode(lp["xattn"], cfg, a, xk, xv)
+                h = h + a
+            f = apply_norm(lp["ln2"], h, cfg.norm_eps)
+            if "router" in lp["ffn"]:
+                f, _ = moe_lib.apply_moe(lp["ffn"], cfg, f)
+            else:
+                f = tfm.apply_mlp(lp["ffn"], f, cfg.act)
+            out = (constrain_cache(k, "kv"), constrain_cache(v, "kv"))
+            return h + f, out
+
+        new_cache = dict(cache)
+        if "dense_layers" in dec:  # DeepSeek-style leading dense (GQA unused)
+            raise NotImplementedError
+        xs = (dec["layers"], cache["k"], cache["v"])
+        if cfg.is_encoder_decoder:
+            xs = xs + (cache["xk"], cache["xv"])
+        x, (ks, vs) = jax.lax.scan(body, x, xs)
+        new_cache["k"], new_cache["v"] = ks, vs
+        return x, new_cache
+
+    def _decode_mla(self, params, cache, x, index):
+        cfg = self.cfg
+        dec = params["decoder"]
+
+        def make_body(use_moe):
+            def body(carry, inp):
+                h = constrain_decode_act(carry)
+                lp, c, r = inp
+                c = constrain_cache(c, "mla")
+                r = constrain_cache(r, "mla")
+                a = apply_norm(lp["ln1"], h, cfg.norm_eps)
+                a, c, r = attn.mla_decode(lp["attn"], cfg, a, c, r, index)
+                c = constrain_cache(c, "mla")
+                r = constrain_cache(r, "mla")
+                h = h + a
+                f = apply_norm(lp["ln2"], h, cfg.norm_eps)
+                if use_moe:
+                    f, _ = moe_lib.apply_moe(lp["ffn"], cfg, f)
+                else:
+                    f = tfm.apply_mlp(lp["ffn"], f, cfg.act)
+                return h + f, (c, r)
+            return body
+
+        new_cache = dict(cache)
+        nd = cfg.first_k_dense
+        c_all, r_all = cache["c"], cache["r"]
+        if nd:
+            x, (cd, rd) = jax.lax.scan(make_body(False), x,
+                                       (dec["dense_layers"],
+                                        c_all[:nd], r_all[:nd]))
+        x, (cm, rm) = jax.lax.scan(make_body(cfg.uses_moe), x,
+                                   (dec["layers"], c_all[nd:], r_all[nd:]))
+        if nd:
+            new_cache["c"] = jnp.concatenate([cd, cm], axis=0)
+            new_cache["r"] = jnp.concatenate([rd, rm], axis=0)
+        else:
+            new_cache["c"], new_cache["r"] = cm, rm
+        return x, new_cache
+
+    def _decode_ssm(self, params, cache, x, index):
+        cfg = self.cfg
+
+        def body(carry, inp):
+            h = constrain_decode_act(carry)
+            lp, state, conv = inp
+            state = constrain_cache(state, "state")
+            conv = constrain_cache(conv, "conv")
+            a = apply_norm(lp["ln"], h, cfg.norm_eps)
+            a, new = ssm_lib.ssm_decode(lp["ssm"], cfg, a,
+                                        {"state": state, "conv": conv})
+            return h + a, (constrain_cache(new["state"], "state"),
+                           constrain_cache(new["conv"], "conv"))
+
+        x, (states, convs) = jax.lax.scan(
+            body, x, (params["decoder"]["layers"], cache["state"],
+                      cache["conv"]))
+        new_cache = dict(cache)
+        new_cache["state"], new_cache["conv"] = states, convs
+        return x, new_cache
+
+    def _decode_hybrid(self, params, cache, x, index):
+        cfg = self.cfg
+        period = cfg.attn_period
+        ssm_subs = [i for i in range(period) if i != period // 2]
+
+        def body(carry, inp):
+            h = constrain_decode_act(carry)
+            lp, k, v, sstates, sconvs = inp
+            k = constrain_cache(k, "kv")
+            v = constrain_cache(v, "kv")
+            sstates = {kk: constrain_cache(s, "state")
+                       for kk, s in sstates.items()}
+            sconvs = {kk: constrain_cache(s, "conv")
+                      for kk, s in sconvs.items()}
+            new_states, new_convs = {}, {}
+            for i in range(period):
+                sub = lp[f"sub{i}"]
+                a = apply_norm(sub["ln1"], h, cfg.norm_eps)
+                if "attn" in sub:
+                    a, k, v = attn.gqa_decode(sub["attn"], cfg, a, k, v,
+                                              index, window=cfg.sliding_window)
+                else:
+                    a, new = ssm_lib.ssm_decode(
+                        sub["ssm"], cfg, a,
+                        {"state": sstates[f"state{i}"],
+                         "conv": sconvs[f"conv{i}"]})
+                    new_states[f"state{i}"] = new["state"]
+                    new_convs[f"conv{i}"] = new["conv"]
+                h = h + a
+                f = apply_norm(sub["ln2"], h, cfg.norm_eps)
+                if "router" in sub["ffn"]:
+                    f, _ = moe_lib.apply_moe(sub["ffn"], cfg, f)
+                else:
+                    f = tfm.apply_mlp(sub["ffn"], f, cfg.act)
+                h = h + f
+            return h, (k, v, new_states, new_convs)
+
+        sstates = {f"state{i}": cache[f"state{i}"] for i in ssm_subs}
+        sconvs = {f"conv{i}": cache[f"conv{i}"] for i in ssm_subs}
+        x, (ks, vs, ns, ncv) = jax.lax.scan(
+            body, x, (params["decoder"]["layers"], cache["k"], cache["v"],
+                      sstates, sconvs))
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = ks, vs
+        for i in ssm_subs:
+            new_cache[f"state{i}"] = ns[f"state{i}"]
+            new_cache[f"conv{i}"] = ncv[f"conv{i}"]
+        return x, new_cache
+
+    # -------------------------------------------- cache-filling prefill
+    def prefill_with_cache(self, params, batch, cache_len: int):
+        """Sequential prefill (scan of decode steps) — used by the CPU
+        serving example; production prefill is the parallel forward."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache = self.init_cache(B, cache_len)
+        if self.cfg.is_encoder_decoder:
+            enc = tfm.apply_encoder(params["encoder"], self.cfg,
+                                    batch["enc_inputs"].astype(_dtype(self.cfg)))
+            pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+            ks, vs = [], []
+            L = self.cfg.num_layers
+            for l in range(L):
+                lp = jax.tree.map(lambda a: a[l],
+                                  params["decoder"]["layers"])
+                k, v = attn.gqa_project_kv(lp["xattn"], enc, pos,
+                                           self.cfg.rope_theta)
+                ks.append(k)
+                vs.append(v)
+            cache["xk"] = jnp.stack(ks).astype(_dtype(self.cfg))
+            cache["xv"] = jnp.stack(vs).astype(_dtype(self.cfg))
+
+        def step(carry, t):
+            cache, last = carry
+            logits, cache = self.decode_step(params, cache, t[:, None])
+            return (cache, logits), None
+
+        (cache, logits), _ = jax.lax.scan(step, (cache, jnp.zeros(
+            (B, self.cfg.padded_vocab), jnp.float32)), tokens.T)
+        return logits, cache
+
+
+def _cross_decode(p, cfg, x, xk, xv):
+    """Single-token cross-attention over precomputed encoder K/V."""
+    import math as _m
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    groups = H // KV
+    qg = q.reshape(B, KV, groups, hd).astype(jnp.float32) / _m.sqrt(hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qg, xk.astype(jnp.float32))
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", w, xv.astype(jnp.float32))
+    o = o.reshape(B, 1, H, hd).astype(x.dtype)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+
+
+def _chunked_ce(emb_params, h: jax.Array, labels: jax.Array,
+                chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy with the (B,S,V) logits materialised only chunk-wise.
+
+    The chunk body is rematerialised so the full logits tensor never exists
+    in the backward pass either.
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = h.shape[1] // chunk
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def one(hi, li):
+        hi = constrain(hi, ("dp", None, None))
+        logits = constrain(logits_from(emb_params, hi).astype(jnp.float32),
+                           ("dp", None, "tp"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        mask = (li >= 0).astype(jnp.float32)
+        return jnp.sum((logz - tgt) * mask), jnp.sum(mask)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        l, c = one(*inp)
+        return (tot + l, cnt + c), None
+
+    (loss, denom), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return loss, denom

@@ -1,0 +1,88 @@
+"""Parameter specs with logical sharding axes.
+
+Every weight in the model stack is declared as a ``ParamInfo(shape, axes,
+init)`` in a nested-dict *spec*.  From a spec we derive, with no duplicated
+structural code:
+
+  * abstract parameters (``jax.ShapeDtypeStruct``) for dry-run lowering,
+  * concrete initialized parameters for smoke tests / real training,
+  * the logical-axes tree consumed by ``repro.distributed.sharding``.
+
+Logical axis vocabulary (mapped to mesh axes by the sharding rules engine):
+  vocab, embed, heads, kv_heads, head, mlp, experts, qlora, kvlora, layers,
+  ssm_inner, ssm_state, ssm_heads, conv, scalar
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    shape: Tuple[int, ...]
+    axes: Axes
+    init: str = "normal"       # normal | zeros | ones | scaled | a_log
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stacked(spec: Dict[str, Any], num: int) -> Dict[str, Any]:
+    """Prepend a scan ('layers') dimension to every ParamInfo in a spec."""
+    out = {}
+    for k, v in spec.items():
+        if isinstance(v, ParamInfo):
+            out[k] = ParamInfo((num,) + v.shape, ("layers",) + v.axes, v.init, v.scale)
+        else:
+            out[k] = stacked(v, num)
+    return out
+
+
+def _is_info(x) -> bool:
+    return isinstance(x, ParamInfo)
+
+
+def abstract_params(spec: Dict[str, Any], dtype) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda i: jax.ShapeDtypeStruct(i.shape, dtype), spec, is_leaf=_is_info)
+
+
+def axes_tree(spec: Dict[str, Any]) -> Dict[str, Any]:
+    return jax.tree.map(lambda i: i.axes, spec, is_leaf=_is_info)
+
+
+def init_params(spec: Dict[str, Any], rng: jax.Array, dtype) -> Dict[str, Any]:
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=_is_info)
+    keys = jax.random.split(rng, len(leaves))
+    vals = []
+    for info, key in zip(leaves, keys):
+        if info.init == "zeros":
+            v = jnp.zeros(info.shape, dtype)
+        elif info.init == "ones":
+            v = jnp.ones(info.shape, dtype)
+        elif info.init == "a_log":
+            # Mamba A initialised in [1, 16), stored as log
+            u = jax.random.uniform(key, info.shape, jnp.float32, 1.0, 16.0)
+            v = jnp.log(u).astype(dtype)
+        else:
+            scale = info.scale
+            if info.init == "scaled":  # fan-in scaled (output projections)
+                fan_in = int(np.prod(info.shape[:-1])) or 1
+                scale = 1.0 / math.sqrt(fan_in)
+            v = (jax.random.normal(key, info.shape, jnp.float32) * scale).astype(dtype)
+        vals.append(v)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_count(spec: Dict[str, Any]) -> int:
+    return sum(int(np.prod(i.shape))
+               for i in jax.tree.leaves(spec, is_leaf=_is_info))

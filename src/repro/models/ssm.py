@@ -1,0 +1,173 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked training scan + O(1)
+decode step, per arXiv:2405.21060.
+
+Shapes: d_inner = expand * d_model, heads nh = d_inner / head_dim (hp),
+state size N.  B/C are shared across heads (MQA-like); dt and A are per
+head; depthwise causal conv (width ssm_conv) over [x, B, C].
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import constrain
+from repro.models.param import ParamInfo
+
+NEG_INF = -2.0e38
+
+
+def ssm_spec(cfg: ArchConfig) -> Dict:
+    d, di, N, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ck = cfg.ssm_conv
+    return {
+        "wz": ParamInfo((d, di), ("embed", "ssm_inner")),
+        "wx": ParamInfo((d, di), ("embed", "ssm_inner")),
+        "wB": ParamInfo((d, N), ("embed", "ssm_state")),
+        "wC": ParamInfo((d, N), ("embed", "ssm_state")),
+        "wdt": ParamInfo((d, nh), ("embed", "ssm_heads")),
+        "dt_bias": ParamInfo((nh,), ("ssm_heads",), init="zeros"),
+        "conv": ParamInfo((ck, di + 2 * N), ("conv", "ssm_inner")),
+        "A_log": ParamInfo((nh,), ("ssm_heads",), init="a_log"),
+        "D": ParamInfo((nh,), ("ssm_heads",), init="ones"),
+        "norm": ParamInfo((di,), ("ssm_inner",), init="ones"),
+        "wout": ParamInfo((di, d), ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float) -> jax.Array:
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32))
+
+
+def _proj_conv(p, cfg: ArchConfig, x: jax.Array):
+    """Shared projections. x: (B, S, D) -> z, xBC(pre-conv), dt."""
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bv = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cv = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    xBC = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. xBC: (B, S, Ch), w: (ck, Ch)."""
+    ck = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (ck - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(ck):
+        out = out + pad[:, i:i + xBC.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(xBC.dtype)
+
+
+def ssd_forward(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Chunked SSD scan over the full sequence. x: (B, S, D)."""
+    B, S, D = x.shape
+    di, N, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+
+    z, xBC, dt = _proj_conv(p, cfg, x)
+    xBC = _causal_conv(xBC, p["conv"])
+    xs, Bv, Cv = jnp.split(xBC, [di, di + N], axis=-1)
+    xh = xs.reshape(B, nC, Q, nh, hp).astype(jnp.float32)
+    Bc = Bv.reshape(B, nC, Q, N).astype(jnp.float32)
+    Cc = Cv.reshape(B, nC, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nC, Q, nh)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (nh,)
+    dA = dtc * A                                              # (B,nC,Q,nh)
+    cum = jnp.cumsum(dA, axis=2)                              # within chunk
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)            # (B,nC,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # q - k (B,nC,Q,Q,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: the future-position branch overflows (decay >> 0) and
+    # would poison gradients through where()'s untaken branch
+    L = jnp.exp(jnp.where(tri[None, None, :, :, None], decay, -1e30))
+    W = scores[..., None] * L * dtc[:, :, None, :, :]         # (B,nC,Q,Q,nh)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", W, xh)
+
+    # ---- chunk states & inter-chunk recurrence ----
+    last = cum[:, :, -1:, :]                                  # (B,nC,1,nh)
+    w_in = jnp.exp(last - cum) * dtc                          # (B,nC,Q,nh)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, w_in, xh)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                   # (B,nC,nh)
+
+    def scan_fn(h, inp):
+        s_c, dcy = inp
+        h_new = h * dcy[..., None, None] + s_c
+        return h_new, h                                       # emit state *before* chunk
+
+    h0 = constrain(jnp.zeros((B, nh, N, hp), jnp.float32),
+                   ("dp", "tp", None, None))
+    _, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.swapaxes(S_chunk, 0, 1), jnp.swapaxes(chunk_decay, 0, 1)))
+    h_prev = jnp.swapaxes(h_prev, 0, 1)                       # (B,nC,nh,N,hp)
+
+    w_out = jnp.exp(cum)                                      # (B,nC,Q,nh)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, w_out, h_prev)
+
+    y = (y_intra + y_inter + p["D"].astype(jnp.float32)[:, None] * xh)
+    y = y.reshape(B, S, di)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["wout"])
+
+
+# ------------------------------------------------------------- decode
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, N, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((batch, nh, N, hp), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+    }
+
+
+def ssm_decode(p, cfg: ArchConfig, x: jax.Array,
+               cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+    """One-token step. x: (B, 1, D)."""
+    B = x.shape[0]
+    di, N, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _proj_conv(p, cfg, x)                        # (B,1,*)
+    hist = jnp.concatenate([cache["conv"], xBC], axis=1)      # (B,ck,Ch)
+    w = p["conv"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w)
+    xBC1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    xs, Bv, Cv = jnp.split(xBC1, [di, di + N], axis=-1)
+    xhead = xs.reshape(B, nh, hp).astype(jnp.float32)
+    Bv, Cv = Bv[:, 0].astype(jnp.float32), Cv[:, 0].astype(jnp.float32)
+    dt1 = dt[:, 0]                                            # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * A)                                  # (B,nh)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bv, dt1, xhead)
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cv, state)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xhead
+    y = y.reshape(B, 1, di)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["wout"])
+    return out, {"state": state, "conv": new_conv}
+
+
+def ssd_reference(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Sequential-recurrence oracle (token by token) for tests."""
+    B, S, D = x.shape
+    cache = ssm_init_cache(cfg, B, x.dtype)
+    outs = []
+    for t in range(S):
+        o, cache = ssm_decode(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,237 @@
+"""Layer stacks for every assigned family.
+
+All stacks scan over layers (params stacked on a leading 'layers' axis) so
+the lowered HLO stays compact for 61–72-layer models and XLA's
+latency-hiding scheduler can overlap per-layer collectives with compute.
+Activation checkpointing (remat) wraps the scanned body per ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_mlp, apply_norm, mlp_spec, norm_spec)
+from repro.models.param import ParamInfo, stacked
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def attn_block_spec(cfg: ArchConfig, use_moe: bool, d_ff: int) -> Dict:
+    a = attn.mla_spec(cfg) if cfg.attention == "mla" else attn.gqa_spec(cfg)
+    ffn = moe_lib.moe_spec(cfg) if use_moe else mlp_spec(cfg, d_ff)
+    return {"ln1": norm_spec(cfg), "attn": a, "ln2": norm_spec(cfg), "ffn": ffn}
+
+
+def apply_attn_block(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+                     use_moe: bool, prefix_len=None) -> Tuple[jax.Array, jax.Array]:
+    from repro.distributed.context import current_rules
+    x = constrain(x, ("dp", None, None))
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    rules = current_rules()
+    sp = (rules is not None and rules.seq_parallel_attn and cfg.num_heads
+          and cfg.num_heads % rules.tp_size != 0)
+    if sp:  # sequence-parallel attention (§Perf): S over the idle model axis
+        h = constrain(h, ("dp", "tp", None))
+    if cfg.attention == "mla":
+        h = attn.mla_forward(p["attn"], cfg, h, positions)
+    else:
+        h = attn.gqa_forward(p["attn"], cfg, h, positions,
+                             causal=True, prefix_len=prefix_len)
+    if sp:
+        h = constrain(h, ("dp", None, None))
+    x = x + h
+    h = apply_norm(p["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        h, aux = moe_lib.apply_moe(p["ffn"], cfg, h)
+    else:
+        h, aux = apply_mlp(p["ffn"], h, cfg.act), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def ssm_block_spec(cfg: ArchConfig) -> Dict:
+    return {"ln": norm_spec(cfg), "ssm": ssm_lib.ssm_spec(cfg)}
+
+
+def apply_ssm_block(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = constrain(x, ("dp", None, None))
+    h = apply_norm(p["ln"], x, cfg.norm_eps)
+    return x + ssm_lib.ssd_forward(p["ssm"], cfg, h)
+
+
+# --------------------------------------------------------- decoder stacks
+
+
+def decoder_spec(cfg: ArchConfig) -> Dict:
+    """Spec for the main decoder stack, by family."""
+    if cfg.family == "ssm":
+        return {"layers": stacked(ssm_block_spec(cfg), cfg.num_layers)}
+    if cfg.is_hybrid:
+        return {"layers": stacked(_jamba_block_spec(cfg),
+                                  cfg.num_layers // cfg.attn_period)}
+    spec: Dict[str, Any] = {}
+    n_dense = cfg.first_k_dense if cfg.uses_moe else 0
+    n_main = cfg.num_layers - n_dense
+    if n_dense:
+        spec["dense_layers"] = stacked(
+            attn_block_spec(cfg, use_moe=False, d_ff=cfg.d_ff), n_dense)
+    spec["layers"] = stacked(
+        attn_block_spec(cfg, use_moe=cfg.uses_moe,
+                        d_ff=cfg.d_ff or cfg.moe_d_ff), n_main)
+    return spec
+
+
+def apply_decoder(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+                  prefix_len=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden, aux_loss_sum)."""
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            return apply_ssm_block(lp, cfg, carry), None
+        x, _ = jax.lax.scan(_remat(body, cfg.remat), x, p["layers"])
+        return x, jnp.zeros((), jnp.float32)
+
+    if cfg.is_hybrid:
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _apply_jamba_block(lp, cfg, h, positions)
+            return (h, aux + a), None
+        (x, aux), _ = jax.lax.scan(_remat(body, cfg.remat),
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   p["layers"])
+        return x, aux
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if "dense_layers" in p:
+        def dbody(carry, lp):
+            h, aux = carry
+            h, a = apply_attn_block(lp, cfg, h, positions, use_moe=False,
+                                    prefix_len=prefix_len)
+            return (h, aux + a), None
+        (x, aux0), _ = jax.lax.scan(_remat(dbody, cfg.remat), (x, aux0),
+                                    p["dense_layers"])
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = apply_attn_block(lp, cfg, h, positions, use_moe=cfg.uses_moe,
+                                prefix_len=prefix_len)
+        return (h, aux + a), None
+    (x, aux), _ = jax.lax.scan(_remat(body, cfg.remat), (x, aux0), p["layers"])
+    return x, aux
+
+
+# ------------------------------------------------------------- Jamba block
+
+
+def _jamba_block_spec(cfg: ArchConfig) -> Dict:
+    """One period of cfg.attn_period sublayers: attention at period//2,
+    SSM elsewhere; MoE FFN on odd sublayers (moe_period=2)."""
+    spec = {}
+    for i in range(cfg.attn_period):
+        is_attn = i == cfg.attn_period // 2
+        is_moe = bool(cfg.moe_period) and (i % cfg.moe_period == cfg.moe_period - 1)
+        if is_attn:
+            sub = {"ln1": norm_spec(cfg), "attn": attn.gqa_spec(cfg)}
+        else:
+            sub = {"ln1": norm_spec(cfg), "ssm": ssm_lib.ssm_spec(cfg)}
+        sub["ln2"] = norm_spec(cfg)
+        sub["ffn"] = (moe_lib.moe_spec(cfg) if is_moe
+                      else mlp_spec(cfg, cfg.d_ff))
+        spec[f"sub{i}"] = sub
+    return spec
+
+
+def _apply_jamba_block(p, cfg: ArchConfig, x: jax.Array,
+                       positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.attn_period):
+        sub = p[f"sub{i}"]
+        x = constrain(x, ("dp", None, None))
+        h = apply_norm(sub["ln1"], x, cfg.norm_eps)
+        if "attn" in sub:
+            h = attn.gqa_forward(sub["attn"], cfg, h, positions, causal=True)
+        else:
+            h = ssm_lib.ssd_forward(sub["ssm"], cfg, h)
+        x = x + h
+        h = apply_norm(sub["ln2"], x, cfg.norm_eps)
+        if "router" in sub["ffn"]:
+            h, a = moe_lib.apply_moe(sub["ffn"], cfg, h)
+            aux = aux + a
+        else:
+            h = apply_mlp(sub["ffn"], h, cfg.act)
+        x = x + h
+    return x, aux
+
+
+# --------------------------------------------------------------- encoder
+
+
+def encoder_spec(cfg: ArchConfig) -> Dict:
+    return {"layers": stacked(attn_block_spec(cfg, use_moe=False, d_ff=cfg.d_ff),
+                              cfg.num_encoder_layers),
+            "ln_post": norm_spec(cfg)}
+
+
+def apply_encoder(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings."""
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, lp):
+        carry = constrain(carry, ("dp", None, None))
+        h = apply_norm(lp["ln1"], carry, cfg.norm_eps)
+        h = attn.gqa_forward(lp["attn"], cfg, h, positions, causal=False)
+        carry = carry + h
+        h = apply_norm(lp["ln2"], carry, cfg.norm_eps)
+        return carry + apply_mlp(lp["ffn"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg.remat), x, p["layers"])
+    return apply_norm(p["ln_post"], x, cfg.norm_eps)
+
+
+# ----------------------------------------------------- enc-dec decoder
+
+
+def xdecoder_spec(cfg: ArchConfig) -> Dict:
+    sub = attn_block_spec(cfg, use_moe=False, d_ff=cfg.d_ff)
+    sub["ln_x"] = norm_spec(cfg)
+    sub["xattn"] = attn.gqa_spec(cfg)
+    return {"layers": stacked(sub, cfg.num_layers)}
+
+
+def apply_xdecoder(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+                   enc_out: jax.Array) -> jax.Array:
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        carry = constrain(carry, ("dp", None, None))
+        h = apply_norm(lp["ln1"], carry, cfg.norm_eps)
+        h = attn.gqa_forward(lp["attn"], cfg, h, positions, causal=True)
+        carry = carry + h
+        h = apply_norm(lp["ln_x"], carry, cfg.norm_eps)
+        k, v = attn.gqa_project_kv(lp["xattn"], enc_out, enc_pos, cfg.rope_theta)
+        h = attn.gqa_forward(lp["xattn"], cfg, h, positions, causal=False,
+                             kv_override=(k, v), kv_positions=enc_pos)
+        carry = carry + h
+        h = apply_norm(lp["ln2"], carry, cfg.norm_eps)
+        return carry + apply_mlp(lp["ffn"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg.remat), x, p["layers"])
+    return x

@@ -1,0 +1,3 @@
+from repro.runtime.coordinator import Coordinator, WorkerState
+
+__all__ = ["Coordinator", "WorkerState"]

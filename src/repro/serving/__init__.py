@@ -1,0 +1,4 @@
+from repro.serving.scheduler import PackageScheduler, Request
+from repro.serving.engine import ServingEngine
+
+__all__ = ["PackageScheduler", "Request", "ServingEngine"]

@@ -1,0 +1,82 @@
+"""Serving engine: batched prefill + decode around Model.decode_step.
+
+Production path: the decode_32k/long_500k dry-run cells lower exactly this
+``decode_step`` on the pod meshes; this class is the host-side loop that
+feeds it (batch assembly from the PackageScheduler, cache management,
+greedy/temperature sampling).  On this container it runs the reduced
+configs end-to-end (examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import Model
+from repro.serving.scheduler import PackageScheduler, Request
+
+
+@dataclasses.dataclass
+class Generation:
+    rid: int
+    tokens: List[int]
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, cache_len: int = 512,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.cache_len = cache_len
+        self.rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate_batch(self, prompts: np.ndarray, max_new: int,
+                       temperature: float = 0.0) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, max_new) int32 greedy/temp samples."""
+        B, P = prompts.shape
+        cache = self.model.init_cache(B, self.cache_len)
+        # prefill by stepping the decoder over the prompt (CPU-scale path;
+        # the pod-scale path lowers prefill_logits instead)
+        logits = None
+        for t in range(P):
+            logits, cache = self._decode(self.params, cache,
+                                         prompts[:, t:t + 1])
+        out = np.zeros((B, max_new), np.int32)
+        tok = None
+        for i in range(max_new):
+            if temperature > 0:
+                self.rng, k = jax.random.split(self.rng)
+                tok = jax.random.categorical(k, logits / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            tok = jnp.clip(tok, 0, self.cfg.vocab_size - 1).astype(jnp.int32)
+            out[:, i] = np.asarray(tok)
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+        return out
+
+    def serve(self, scheduler: PackageScheduler, *, ticks: int,
+              pad_token: int = 0) -> List[Generation]:
+        """Run admission ticks; each admitted batch is generated jointly."""
+        done: List[Generation] = []
+        for _ in range(ticks):
+            batch = scheduler.tick()
+            if not batch:
+                continue
+            P = max(r.prompt_tokens for r in batch)
+            new = max(r.max_new_tokens for r in batch)
+            prompts = np.full((len(batch), P), pad_token, np.int32)
+            for i, r in enumerate(batch):
+                rng = np.random.default_rng(r.rid)
+                prompts[i, -r.prompt_tokens:] = rng.integers(
+                    1, self.cfg.vocab_size, r.prompt_tokens)
+            gen = self.generate_batch(prompts, new)
+            for i, r in enumerate(batch):
+                done.append(Generation(r.rid,
+                                       gen[i, :r.max_new_tokens].tolist()))
+        return done

@@ -1,0 +1,94 @@
+"""Package-query admission control for serving — the paper's technique in
+the serving tier.
+
+Every scheduling tick, the waiting-request pool is a relation (one row per
+request: priority, prefill FLOPs, KV-cache bytes, decode length estimate)
+and batch formation IS a package query:
+
+    SELECT PACKAGE(*) FROM queue REPEAT 0
+    SUCH THAT COUNT(P.*) <= max_batch
+          AND SUM(P.kv_bytes)      <= hbm_budget
+          AND SUM(P.prefill_flops) <= flop_budget
+    MAXIMIZE  SUM(P.priority)
+
+solved with Dual Reducer (sub-second at 10^5+ queued requests, matching the
+paper's interactivity requirement).  This replaces greedy FCFS admission
+with a globally optimal knapsack per tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.dual_reducer import dual_reducer
+from repro.core.paql import Constraint, PackageQuery
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_tokens: int
+    max_new_tokens: int
+    priority: float
+
+    def kv_bytes(self, cfg) -> float:
+        per_tok = 2 * 2 * cfg.num_kv_heads * cfg.resolved_head_dim \
+            * cfg.num_layers
+        return float(per_tok * (self.prompt_tokens + self.max_new_tokens))
+
+    def prefill_flops(self, cfg) -> float:
+        n_active = cfg.active_param_count()
+        return float(2 * n_active * self.prompt_tokens)
+
+
+class PackageScheduler:
+    def __init__(self, cfg, *, hbm_budget_bytes: float,
+                 flop_budget: float, max_batch: int = 64, seed: int = 0):
+        self.cfg = cfg
+        self.hbm_budget = hbm_budget_bytes
+        self.flop_budget = flop_budget
+        self.max_batch = max_batch
+        self.queue: List[Request] = []
+        self.rng = np.random.default_rng(seed)
+        self._admitted_total = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _table(self) -> Dict[str, np.ndarray]:
+        return {
+            "priority": np.array([r.priority for r in self.queue]),
+            "kv_bytes": np.array([r.kv_bytes(self.cfg) for r in self.queue]),
+            "prefill_flops": np.array(
+                [r.prefill_flops(self.cfg) for r in self.queue]),
+        }
+
+    def tick(self) -> List[Request]:
+        """Admit the optimal batch; admitted requests leave the queue."""
+        if not self.queue:
+            return []
+        table = self._table()
+        query = PackageQuery(
+            "priority", maximize=True,
+            constraints=(
+                Constraint(None, 0, self.max_batch),
+                Constraint("kv_bytes", hi=self.hbm_budget),
+                Constraint("prefill_flops", hi=self.flop_budget),
+            ))
+        res = dual_reducer(query, table, np.arange(len(self.queue)),
+                           q=min(500, len(self.queue)), rng=self.rng,
+                           ilp_kwargs=dict(max_nodes=200, time_limit_s=5))
+        if not res.feasible:
+            return []   # nothing admissible this tick
+        take = set(int(i) for i in res.idx)
+        admitted = [r for i, r in enumerate(self.queue) if i in take]
+        self.queue = [r for i, r in enumerate(self.queue) if i not in take]
+        self._admitted_total += len(admitted)
+        return admitted
+
+    @property
+    def admitted_total(self) -> int:
+        return self._admitted_total

@@ -1,0 +1,5 @@
+from repro.training.optimizer import adamw_init, adamw_update, OptHyper
+from repro.training.step import make_train_step, abstract_train_state
+
+__all__ = ["adamw_init", "adamw_update", "OptHyper", "make_train_step",
+           "abstract_train_state"]

@@ -1,0 +1,82 @@
+"""AdamW with global-norm clipping, hand-rolled on pytrees.
+
+Moments are stored in ``cfg.opt_dtype`` (f32 default; bf16 for the 398B/671B
+MoEs so the optimizer fits the pod — noted in DESIGN.md).  All update math
+runs in f32.  Because parameters are FSDP-sharded by the rules engine and
+moments share the parameter sharding, this is ZeRO-3-style sharding with no
+additional code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptHyper:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(h: OptHyper, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(h.warmup_steps, 1)
+    decay_t = (step - h.warmup_steps) / jnp.maximum(
+        h.total_steps - h.warmup_steps, 1)
+    decay_t = jnp.clip(decay_t, 0.0, 1.0)
+    cos = h.min_lr_frac + (1 - h.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * decay_t))
+    return h.lr * jnp.where(step < h.warmup_steps, warm, cos)
+
+
+def adamw_init(params, opt_dtype: str) -> Dict[str, Any]:
+    dt = jnp.dtype(opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(grads, opt_state, params, h: OptHyper):
+    step = opt_state["step"] + 1
+    lr = schedule(h, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, h.clip_norm / jnp.maximum(gnorm, 1e-9))
+    t = step.astype(jnp.float32)
+    bc1 = 1 - h.b1 ** t
+    bc2 = 1 - h.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32) * scale
+        mu32 = h.b1 * mu.astype(jnp.float32) + (1 - h.b1) * g32
+        nu32 = h.b2 * nu.astype(jnp.float32) + (1 - h.b2) * jnp.square(g32)
+        upd32 = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + h.eps)
+        upd32 = upd32 + h.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * upd32
+        return newp.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm

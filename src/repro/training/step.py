@@ -1,0 +1,98 @@
+"""Train-step builder: value_and_grad + AdamW (+ optional microbatch
+accumulation and gradient compression), all pjit-shardable.
+
+State is a plain dict pytree:
+    {"params": ..., "opt": {"mu","nu","step"}}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import Model
+from repro.training.optimizer import OptHyper, adamw_init, adamw_update
+
+
+def abstract_train_state(model: Model) -> Dict[str, Any]:
+    cfg = model.cfg
+    params = model.abstract_params()
+    dt = jnp.dtype(cfg.opt_dtype)
+    like = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {"params": params,
+            "opt": {"mu": jax.tree.map(like, params),
+                    "nu": jax.tree.map(like, params),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def init_train_state(model: Model, rng: jax.Array,
+                     compress: bool = False) -> Dict[str, Any]:
+    params = model.init(rng)
+    opt = adamw_init(params, model.cfg.opt_dtype)
+    if compress:
+        from repro.training.compression import ef_init
+        opt["ef"] = ef_init(params)
+    return {"params": params, "opt": opt}
+
+
+def make_train_step(model: Model, hyper: Optional[OptHyper] = None,
+                    microbatches: int = 1,
+                    compress: bool = False) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``compress=True`` applies int8 gradient compression with error feedback
+    (``repro.training.compression``); the residual tree lives in
+    state["opt"]["ef"] (add it via ``init_train_state(..., compress=True)``).
+    """
+    hyper = hyper or OptHyper()
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), mb)
+        grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.float32),
+                             grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / microbatches, metrics, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        opt_in = dict(state["opt"])
+        if compress:
+            from repro.training.compression import compress_with_ef
+            grads, new_ef = compress_with_ef(grads, opt_in.pop("ef"))
+        params, opt, gnorm = adamw_update(grads, opt_in, state["params"],
+                                          hyper)
+        if compress:
+            opt = dict(opt)
+            opt["ef"] = new_ef
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm,
+                       step=opt["step"].astype(jnp.float32))
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step

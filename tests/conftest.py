@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+
+# The core engine enables jax x64 at import; import it first so every test
+# module sees the same (production) numeric configuration regardless of
+# collection order.
+import repro.core  # noqa: F401
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,104 @@
+"""DLV partitioning: the paper's Theorems 1-2, tree lookups, KD-tree
+comparison (Fig. 7 qualitative), scale factors."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dlv import (dlv, dlv_1d, dlv_1d_partition, get_scale_factors,
+                            ratio_score)
+from repro.core.kdtree import kdtree_partition
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([100, 500, 2000]))
+def test_theorem2_universal_ratio_score(seed, n):
+    """1-D DLV with beta = 24 sigma^2/n^2: z <= 24/n and p <= 3n/4 + 1/2."""
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        vals = rng.normal(size=n)
+    elif kind == 1:
+        vals = rng.exponential(size=n)
+    else:
+        vals = np.concatenate([rng.normal(-5, 0.1, n // 2),
+                               rng.normal(5, 3.0, n - n // 2)])
+    vals = np.sort(vals)
+    if np.var(vals) <= 0:
+        return
+    beta = 24 * np.var(vals) / n ** 2
+    gid, _ = dlv_1d_partition(vals, beta)
+    p = int(gid.max()) + 1
+    assert ratio_score(vals, gid) <= 24 / n + 1e-9
+    assert p <= 0.75 * n + 0.5
+
+
+def test_theorem1_construction():
+    """KD-tree ratio score explodes; 1-D DLV's goes to 0."""
+    omega, n = 1.0, 400
+    eps = 3 * omega / n
+    S = np.sort(np.concatenate([[-omega, omega], np.full(n, omega + eps)]))
+    # DLV
+    beta = 24 * np.var(S) / len(S) ** 2
+    gid, _ = dlv_1d_partition(S, beta)
+    assert ratio_score(S, gid) == pytest.approx(0.0, abs=1e-12)
+    # KD-tree with radius limit omega: groups {-w, w} together
+    kd = kdtree_partition(S[:, None], tau=2, omega=omega)
+    z_kd = ratio_score(S, kd.gid)
+    assert z_kd > 1.0   # catastrophically bad (unbounded as n grows)
+
+
+def test_dlv_beats_kdtree_ratio_score():
+    """Fig. 7: DLV's ratio score beats KD-tree's at equal #groups."""
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(20_000, 1))
+    res = dlv(X, d_f=100)
+    kd = kdtree_partition(X, tau=max(2, 20_000 // res.num_groups))
+    z_dlv = ratio_score(X[:, 0], res.gid)
+    z_kd = ratio_score(X[:, 0], kd.gid)
+    assert z_dlv < z_kd
+
+
+def test_dlv_group_membership_tree():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(5000, 3)) * np.array([1.0, 5.0, 0.2])
+    res = dlv(X, d_f=50)
+    assert res.num_groups >= 5000 // 50 * 0.5
+    for i in rng.choice(5000, 100, replace=False):
+        assert res.get_group(X[i]) == res.gid[i]
+
+
+def test_dlv_reps_and_boxes():
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(2000, 2))
+    res = dlv(X, d_f=20)
+    for g in (0, res.num_groups // 2, res.num_groups - 1):
+        m = res.members(g)
+        np.testing.assert_allclose(res.reps[g], X[m].mean(0), rtol=1e-10)
+        np.testing.assert_allclose(res.boxes_lo[g], X[m].min(0), rtol=1e-10)
+        np.testing.assert_allclose(res.boxes_hi[g], X[m].max(0), rtol=1e-10)
+
+
+def test_dlv_groups_are_contiguous_slices():
+    """The cache-friendly layout the paper designs for."""
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(3000, 2))
+    res = dlv(X, d_f=30)
+    assert res.offsets[0] == 0 and res.offsets[-1] == 3000
+    assert np.all(np.diff(res.offsets) >= 1)
+    # order is a permutation; gid is constant within each slice
+    assert len(np.unique(res.order)) == 3000
+    for g in rng.integers(0, res.num_groups, 20):
+        sl = res.order[res.offsets[g]:res.offsets[g + 1]]
+        assert np.all(res.gid[sl] == g)
+
+
+def test_get_scale_factors_hits_target():
+    rng = np.random.default_rng(6)
+    X = rng.normal(size=(5000, 2))
+    c = get_scale_factors(X, d_f=50, rng=rng)
+    for j in range(2):
+        vals = np.sort(X[:, j])
+        beta = c[j] * np.var(vals) / 50 ** 2
+        p = int(dlv_1d(vals, beta).sum()) + 1
+        # binary search on a sample: within 3x of the target split count
+        assert 50 / 3 <= p <= 50 * 3

@@ -1,0 +1,73 @@
+"""Dual Reducer: support-size theory, auxiliary-LP spreading, fallback."""
+import numpy as np
+import pytest
+
+from repro.core.dual_reducer import dual_reducer
+from repro.core.lp import solve_lp_np
+from repro.core.paql import Constraint, PackageQuery
+
+
+def _table(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "obj": rng.normal(10, 3, n),
+        "a": rng.normal(5, 1, n),
+    }
+
+
+def _query(lo=10, hi=20):
+    return PackageQuery("obj", maximize=True, constraints=(
+        Constraint(None, lo, hi), Constraint("a", lo=4.5 * lo, hi=5.5 * hi)))
+
+
+def test_lp_support_bound():
+    """#positives <= ceil(m + ||x*||_1)  (paper §2.4)."""
+    table = _table(5000)
+    q = _query()
+    c, A, bl, bu, ub = q.matrices(table, None)
+    res = solve_lp_np(c, A, bl, bu, ub)
+    assert res.status == 0
+    support = int(np.sum(res.x > 1e-9))
+    assert support <= int(np.ceil(A.shape[0] + res.x.sum()))
+
+
+def test_auxiliary_lp_spreads_support():
+    """Upper bound E/q forces ~q positive variables (paper §2.4)."""
+    table = _table(5000)
+    q = _query()
+    c, A, bl, bu, ub = q.matrices(table, None)
+    lp1 = solve_lp_np(c, A, bl, bu, ub)
+    E = lp1.x.sum()
+    target_q = 300
+    lp2 = solve_lp_np(c, A, bl, bu, np.minimum(ub, E / target_q))
+    assert lp2.status == 0
+    support = int(np.sum(lp2.x > 1e-9))
+    assert support >= target_q * 0.8
+
+
+def test_dual_reducer_solves():
+    table = _table(5000)
+    q = _query()
+    res = dual_reducer(q, table, np.arange(5000), q=100)
+    assert res.feasible
+    assert q.check_package(table, res.idx, res.mult)
+    # objective close to its own LP bound
+    assert res.obj >= 0.95 * res.lp_obj
+
+
+def test_dual_reducer_fallback_fires():
+    """Tiny q forces the exponential fallback; it must still solve."""
+    table = _table(2000, seed=1)
+    q = _query()
+    res = dual_reducer(q, table, np.arange(2000), q=1,
+                       ilp_kwargs=dict(max_nodes=50, time_limit_s=5))
+    assert res.feasible
+
+
+def test_dual_reducer_reports_infeasible():
+    table = _table(100)
+    q = PackageQuery("obj", maximize=True, constraints=(
+        Constraint(None, 150, 200),))   # needs 150 tuples of 100
+    res = dual_reducer(q, table, np.arange(100))
+    assert not res.feasible
+    assert res.status.startswith("lp_infeasible")

@@ -1,0 +1,71 @@
+"""ILP branch & bound + heuristics vs exhaustive enumeration."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ilp import (ILP_OPTIMAL, brute_force_ilp, solve_ilp,
+                            _swap_search)
+
+
+def _random_ilp(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 9))
+    m = int(rng.integers(1, 4))
+    c = rng.normal(size=n)
+    A = rng.normal(size=(m, n))
+    ub = rng.integers(1, 3, size=n).astype(float)
+    x0 = rng.integers(0, 2, n).astype(float)
+    act = A @ x0
+    bl = act - np.abs(rng.normal(size=m))
+    bu = act + np.abs(rng.normal(size=m))
+    return c, A, bl, bu, ub
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_ilp_matches_brute_force(seed):
+    c, A, bl, bu, ub = _random_ilp(seed)
+    r1 = solve_ilp(c, A, bl, bu, ub)
+    r2 = brute_force_ilp(c, A, bl, bu, ub)
+    assert r1.feasible == r2.feasible
+    if r1.feasible and r1.status == ILP_OPTIMAL:
+        assert abs(r1.obj - r2.obj) < 1e-6
+
+
+def test_ilp_infeasible():
+    c = np.ones(4)
+    A = np.ones((1, 4))
+    r = solve_ilp(c, A, np.array([10.0]), np.array([np.inf]), np.ones(4))
+    assert not r.feasible
+
+
+def test_ilp_solution_is_integral_and_feasible():
+    rng = np.random.default_rng(5)
+    n = 200
+    c = rng.normal(size=n)
+    A = np.stack([np.ones(n), rng.normal(10, 2, n)])
+    bl = np.array([10.0, 95.0])
+    bu = np.array([20.0, 160.0])
+    r = solve_ilp(c, A, bl, bu, np.ones(n))
+    assert r.feasible
+    assert np.all(np.abs(r.x - np.round(r.x)) < 1e-9)
+    act = A @ r.x
+    assert np.all(act >= bl - 1e-6) and np.all(act <= bu + 1e-6)
+
+
+def test_swap_search_repairs_tight_window():
+    """The tight-BETWEEN regime that defeats naive rounding."""
+    rng = np.random.default_rng(11)
+    n = 1500
+    vals = rng.normal(14, 1.2, n)
+    c = np.abs(rng.normal(1, 0.5, n))
+    A = np.stack([np.ones(n), vals])
+    target = 30 * 14.0
+    bl = np.array([15.0, target - 0.5])
+    bu = np.array([45.0, target + 0.5])     # width-1 window on a sum of ~30
+    from repro.core.lp import solve_lp_np
+    root = solve_lp_np(c, A, bl, bu, np.ones(n))
+    assert root.status == 0
+    x, obj = _swap_search(root.x, c, A, bl, bu, np.zeros(n), np.ones(n), 1e-6)
+    assert x is not None
+    act = A @ x
+    assert np.all(act >= bl - 1e-6) and np.all(act <= bu + 1e-6)

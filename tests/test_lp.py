@@ -1,0 +1,96 @@
+"""LP solver: KKT optimality certificates (hypothesis property tests),
+numpy/JAX twin agreement, infeasibility detection."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import (INFEASIBLE, OPTIMAL, solve_lp, solve_lp_np,
+                           verify_optimality)
+
+
+def _random_lp(seed, one_sided=True):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 50))
+    m = int(rng.integers(1, 6))
+    c = rng.normal(size=n)
+    A = rng.normal(size=(m, n))
+    ub = rng.integers(1, 4, size=n).astype(float)
+    x0 = rng.uniform(0, 1, n) * ub
+    act = A @ x0
+    width = np.abs(rng.normal(size=m)) * 2
+    bl = act - width * rng.uniform(0, 1, m)
+    bu = act + width * rng.uniform(0, 1, m)
+    if one_sided:
+        for i in range(m):
+            r = rng.random()
+            if r < 0.2:
+                bl[i] = -np.inf
+            elif r < 0.3:
+                bu[i] = np.inf
+    return c, A, bl, bu, ub
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_lp_optimality_certificate(seed):
+    """Every OPTIMAL answer carries an independently-verifiable KKT
+    certificate (primal feasibility + dual feasibility + compl. slack)."""
+    c, A, bl, bu, ub = _random_lp(seed)
+    res = solve_lp_np(c, A, bl, bu, ub)
+    if res.status == OPTIMAL:
+        ok, msg = verify_optimality(res, c, A, bl, bu, ub)
+        assert ok, msg
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_lp_twins_agree(seed):
+    c, A, bl, bu, ub = _random_lp(seed)
+    r1 = solve_lp_np(c, A, bl, bu, ub)
+    r2 = solve_lp(c, A, bl, bu, ub)
+    assert r1.status == r2.status
+    if r1.status == OPTIMAL:
+        assert abs(r1.obj - r2.obj) <= 1e-6 * (1 + abs(r1.obj))
+
+
+def test_lp_detects_infeasible_box():
+    # count >= 5 but every upper bound is 0
+    c = np.ones(4)
+    A = np.ones((1, 4))
+    res = solve_lp_np(c, A, np.array([5.0]), np.array([np.inf]), np.zeros(4))
+    assert res.status == INFEASIBLE
+
+
+def test_lp_detects_infeasible_constraints():
+    # sum x >= 10 with 3 vars of ub 1
+    c = np.ones(3)
+    A = np.ones((1, 3))
+    res = solve_lp_np(c, A, np.array([10.0]), np.array([np.inf]), np.ones(3))
+    assert res.status == INFEASIBLE
+
+
+def test_lp_known_optimum():
+    # max x0 + 2 x1 s.t. x0 + x1 <= 1.5, 0<=x<=1  -> x=(0.5,1), obj 2.5
+    c = np.array([-1.0, -2.0])
+    A = np.array([[1.0, 1.0]])
+    res = solve_lp_np(c, A, np.array([-np.inf]), np.array([1.5]),
+                      np.ones(2))
+    assert res.status == OPTIMAL
+    assert res.obj == pytest.approx(-2.5, abs=1e-9)
+    assert res.x == pytest.approx([0.5, 1.0], abs=1e-9)
+
+
+def test_lp_bfrt_long_step_count():
+    """Package-structured LP solves in few iterations (BFRT long steps)."""
+    rng = np.random.default_rng(1)
+    n = 20_000
+    c = rng.normal(size=n)
+    A = np.stack([np.ones(n), rng.normal(14, 1.5, n)])
+    bl = np.array([15.0, 430.0])
+    bu = np.array([45.0, 450.0])
+    res = solve_lp_np(c, A, bl, bu, np.ones(n))
+    assert res.status == OPTIMAL
+    assert res.iters < 100, res.iters
+    # support size <= m + ||x||_1 (paper §2.4)
+    support = int(np.sum(res.x > 1e-9))
+    assert support <= int(np.ceil(2 + res.x.sum())) + 1

@@ -1,0 +1,125 @@
+"""End-to-end Progressive Shading: solvability, package validity,
+integrality gap, comparison against direct ILP and SketchRefine, and the
+paper's hardness machinery (Table 1 regression)."""
+import numpy as np
+import pytest
+
+from repro.core.engine import PackageQueryEngine
+from repro.core.hardness import (Q1_SDSS, Q2_TPCH, column_stats, instantiate,
+                                 ndtri)
+from repro.data.synth_tables import make_table
+
+ILP_KW = dict(max_nodes=200, time_limit_s=15)
+
+
+@pytest.fixture(scope="module")
+def sdss_engine():
+    table = make_table("sdss", 30_000, seed=3)
+    attrs = ["tmass_prox", "j", "h", "k"]
+    eng = PackageQueryEngine(table, attrs, d_f=20, alpha=1500, seed=0)
+    eng.partition()
+    return eng, table, column_stats(table, attrs)
+
+
+def test_hierarchy_shape(sdss_engine):
+    eng, _, _ = sdss_engine
+    H = eng.hierarchy
+    assert H.layers[0].size == 30_000
+    assert H.layers[-1].size <= eng.alpha
+    for l in range(1, H.L + 1):
+        # downscale per layer within a sane band around d_f
+        f = H.layers[l - 1].size / H.layers[l].size
+        assert 2 <= f <= eng.d_f * 4
+
+
+@pytest.mark.parametrize("h", [1, 3, 5, 7])
+def test_ps_solves_and_validates(sdss_engine, h):
+    eng, table, stats = sdss_engine
+    q = instantiate(Q1_SDSS, stats, h)
+    res = eng.solve(q, ilp_kwargs=ILP_KW)
+    assert res.feasible, res.status
+    assert q.check_package(table, res.idx, res.mult)
+    # multiplicities are positive ints within REPEAT+1
+    assert np.all(res.mult >= 1) and np.all(res.mult <= q.repeat + 1)
+    # package size within COUNT bounds
+    assert 15 <= res.mult.sum() <= 45
+
+
+@pytest.mark.parametrize("h", [1, 5])
+def test_ps_integrality_gap_close_to_lp(sdss_engine, h):
+    """Paper §4.2: PS integrality gap stays close to 1 (min query)."""
+    eng, table, stats = sdss_engine
+    q = instantiate(Q1_SDSS, stats, h)
+    res = eng.solve(q, ilp_kwargs=ILP_KW)
+    lp = eng.lp_bound(q)
+    assert res.feasible and np.isfinite(lp)
+    gap = (abs(res.obj) + 0.1) / (abs(lp) + 0.1)
+    assert 1.0 - 1e-9 <= gap <= 1.10, gap
+
+
+def test_ps_beats_or_matches_sketchrefine(sdss_engine):
+    """Paper Fig. 8: PS objective is at least as good as SketchRefine's
+    (minimisation: lower is better), and SR may fail where PS succeeds."""
+    eng, table, stats = sdss_engine
+    q = instantiate(Q1_SDSS, stats, 3)
+    ps = eng.solve(q, ilp_kwargs=ILP_KW)
+    sr = eng.solve_sketchrefine(q, ilp_kwargs=ILP_KW)
+    assert ps.feasible
+    if sr.feasible:
+        assert ps.obj <= sr.obj * 1.02 + 0.5
+
+
+def test_tpch_maximization():
+    table = make_table("tpch", 20_000, seed=4)
+    attrs = ["price", "quantity", "discount", "tax"]
+    stats = column_stats(table, attrs)
+    eng = PackageQueryEngine(table, attrs, d_f=20, alpha=1500, seed=0)
+    eng.partition()
+    q = instantiate(Q2_TPCH, stats, 5)
+    res = eng.solve(q, ilp_kwargs=ILP_KW)
+    assert res.feasible
+    assert q.check_package(table, res.idx, res.mult)
+    lp = eng.lp_bound(q)
+    assert res.obj <= lp + 1e-6          # LP is an upper bound (max query)
+    assert res.obj >= 0.9 * lp           # and we get close to it
+
+
+# ---------------------------------------------------- hardness machinery
+
+
+def test_ndtri_accuracy():
+    # spot values of the inverse normal CDF
+    assert ndtri(0.5) == pytest.approx(0.0, abs=1e-12)
+    assert ndtri(0.975) == pytest.approx(1.959964, abs=1e-5)
+    assert ndtri(0.9) == pytest.approx(1.2815516, abs=1e-6)
+    assert ndtri(1e-6) == pytest.approx(-4.753424, abs=1e-5)
+
+
+def test_hardness_reproduces_paper_table1():
+    """Bounds for Q1 SDSS at h̃=1 and h̃=3 match the published Table 1."""
+    stats = {"j": (14.82, 1.562), "h": (14.05, 1.657), "k": (13.73, 1.727),
+             "tmass_prox": (14.45, 14.96)}
+    q1 = instantiate(Q1_SDSS, stats, 1)
+    b = {c.attr: c for c in q1.constraints if c.attr}
+    assert b["j"].lo == pytest.approx(445.37, abs=0.05)
+    assert b["h"].hi == pytest.approx(420.68, abs=0.05)
+    assert b["k"].lo == pytest.approx(406.04, abs=0.05)
+    assert b["k"].hi == pytest.approx(417.76, abs=0.05)
+    q3 = instantiate(Q1_SDSS, stats, 3)
+    b3 = {c.attr: c for c in q3.constraints if c.attr}
+    assert b3["j"].lo == pytest.approx(455.56, abs=0.05)
+    assert b3["h"].hi == pytest.approx(409.87, abs=0.05)
+
+
+def test_hardness_monotone():
+    """Higher h̃ shrinks the feasible region monotonically."""
+    stats = {"j": (14.82, 1.562), "h": (14.05, 1.657), "k": (13.73, 1.727),
+             "tmass_prox": (14.45, 14.96)}
+    prev_lo, prev_width = -np.inf, np.inf
+    for h in (1, 3, 5, 7, 9):
+        q = instantiate(Q1_SDSS, stats, h)
+        b = {c.attr: c for c in q.constraints if c.attr}
+        assert b["j"].lo >= prev_lo
+        width = b["k"].hi - b["k"].lo
+        assert width <= prev_width
+        prev_lo, prev_width = b["j"].lo, width

@@ -1,0 +1,136 @@
+"""Sharding rules: divisibility fallbacks, cache pspecs, HLO analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.distributed.hlo_analysis import (collective_bytes, hlo_stats,
+                                            shape_bytes)
+from repro.distributed.sharding import make_rules
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def rules16():
+    # AbstractMesh: build shardings without 256 real devices
+    from jax.sharding import AbstractMesh
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    return make_rules(mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_pspecs_valid_for_all_archs(arch, rules16):
+    """Every param gets a pspec whose sharded dims divide exactly, with no
+    mesh axis used twice."""
+    cfg = get_config(arch)
+    model = Model(cfg)
+    params = model.abstract_params()
+    axes = model.axes()
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    assert len(flat_p) == len(flat_a)
+    n_tp = 0
+    for p, ax in zip(flat_p, flat_a):
+        spec = rules16.param_pspec(p.shape, ax)
+        used = []
+        for dim, entry in zip(p.shape, tuple(spec)):
+            if entry is None:
+                continue
+            entries = entry if isinstance(entry, tuple) else (entry,)
+            for e in entries:
+                used.append(e)
+                size = rules16.mesh.shape[e]
+                assert dim % size == 0, (arch, p.shape, ax, spec)
+            if "model" in entries:
+                n_tp += 1
+        assert len(used) == len(set(used)), (arch, spec)
+    assert n_tp > 0, f"{arch}: no parameter is tensor-parallel"
+
+
+def test_fsdp_shards_large_params(rules16):
+    spec = rules16.param_pspec((1024, 4096), ("embed", "mlp"))
+    # mlp -> model TP; largest remaining (1024) -> data FSDP
+    assert tuple(spec) == ("data", "model")
+
+
+def test_small_params_stay_replicated(rules16):
+    spec = rules16.param_pspec((576,), ("embed",))
+    assert tuple(spec) == (None,)
+
+
+def test_nondivisible_dims_fall_back(rules16):
+    # 9 heads on a 16-way model axis: falls back, never invalid
+    spec = rules16.param_pspec((576, 9, 64), ("embed", "heads", "head"))
+    for dim, entry in zip((576, 9, 64), tuple(spec)):
+        if entry is not None:
+            es = entry if isinstance(entry, tuple) else (entry,)
+            for e in es:
+                assert dim % rules16.mesh.shape[e] == 0
+
+
+def test_cache_pspecs(rules16):
+    # decode_32k style: B divisible -> B over dp, S over model
+    spec = rules16.cache_pspec((40, 128, 32768, 2, 128), "kv")
+    assert tuple(spec)[1] == "data"
+    assert tuple(spec)[2] == "model"
+    # long_500k style: B=1 -> S over (data, model)
+    spec = rules16.cache_pspec((48, 1, 524288, 8, 64), "kv")
+    assert tuple(spec)[1] is None
+    assert "model" in tuple(spec)[2] and "data" in tuple(spec)[2]
+
+
+def test_shape_applicability_matrix():
+    """The 40-cell matrix: 34 runnable + 6 documented long_500k skips."""
+    runnable = skipped = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            ok, why = shape_applicable(cfg, s)
+            if ok:
+                runnable += 1
+            else:
+                skipped += 1
+                assert s.name == "long_500k"
+                assert why
+    assert runnable == 34 and skipped == 6
+
+
+# ------------------------------------------------------------- HLO tools
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]{1,0}") == 128
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(f32[2], s32[4])") == 24
+    assert shape_bytes("pred[]") == 1
+
+
+def test_hlo_stats_counts_scanned_dots():
+    L, d = 8, 64
+    W = jnp.ones((L, d, d), jnp.float32)
+    x = jnp.ones((4, d), jnp.float32)
+
+    def f(x, W):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, W)[0]
+
+    hlo = jax.jit(f).lower(x, W).compile().as_text()
+    st = hlo_stats(hlo)
+    assert st.flops == pytest.approx(L * 2 * 4 * d * d)
+
+
+def test_collective_parser_on_sharded_module():
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.sharding import NamedSharding
+    x = jnp.ones((8, 8))
+
+    @jax.jit
+    def f(a):
+        return a.sum()
+
+    hlo = f.lower(x).compile().as_text()
+    stats = collective_bytes(hlo)   # no collectives on 1 device
+    assert stats.total_bytes == 0.0
