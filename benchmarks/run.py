@@ -13,7 +13,7 @@ import time
 
 from benchmarks import (ablations, dual_reducer_bench, grid, infeasibility,
                         partitioning, pds_scaling, ratio_score, roofline,
-                        scaling)
+                        scaling, warm_start)
 from benchmarks.common import ROWS
 
 MODULES = {
@@ -25,6 +25,7 @@ MODULES = {
     "miniexp3_pds": pds_scaling,
     "miniexp5_partitioning": partitioning,
     "miniexp7_8_dual_reducer": dual_reducer_bench,
+    "appc_warm_start": warm_start,
     "roofline": roofline,
 }
 

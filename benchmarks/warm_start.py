@@ -1,0 +1,203 @@
+"""Cold vs warm dual-simplex starts across Progressive Shading and the
+Dual Reducer (App. C customization).
+
+Paired design: the warm-started pipeline is run once, and every LP in it
+(each Shading layer, Dual Reducer's lp1, its bound-tightened auxiliary
+LP, and every branch & bound node re-solve inside the sub-ILP) is also
+re-solved cold, so iteration counts compare the SAME LP sequence —
+branching-path divergence from non-unique optima cannot skew the totals.
+Warm starts never change an answer (asserted here per LP); they only
+change how many pivots reach it.
+
+Records totals in ``BENCH_lp.json`` at the repo root so later PRs can
+track the trajectory; CSV rows go through benchmarks.common.emit.
+
+NOTE: ``_pipeline`` intentionally replays the shading/dual-reducer LP
+sequence inline (rather than calling progressive_shading) so that every
+LP flows through the paired probe exactly once; if shading() or
+dual_reducer() grow new LP call sites, mirror them here or the
+trajectory numbers will measure a stale replica of the pipeline.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import build_engine, emit, query_for
+from repro.core import ilp as ilp_mod
+from repro.core.lp import OPTIMAL, solve_lp_np
+from repro.core.shading import map_warm_basis
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_lp.json"
+
+
+class _PairedProbe:
+    """Wraps solve_lp_np: forwards the (possibly warm) solve, and re-runs
+    the same LP cold to get the paired cold iteration count."""
+
+    def __init__(self):
+        self.warm_iters = 0
+        self.cold_iters = 0
+        self.n_lps = 0
+        self.n_warmed = 0
+
+    def __call__(self, c, A, bl, bu, ub, **kw):
+        res = solve_lp_np(c, A, bl, bu, ub, **kw)
+        self.n_lps += 1
+        self.warm_iters += res.iters
+        if kw.get("warm_start") is not None:
+            self.n_warmed += 1
+            kw_cold = dict(kw, warm_start=None)
+            cold = solve_lp_np(c, A, bl, bu, ub, **kw_cold)
+            self.cold_iters += cold.iters
+            if res.status == OPTIMAL and cold.status == OPTIMAL:
+                assert abs(res.obj - cold.obj) <= 1e-6 * (1 + abs(cold.obj))
+        else:
+            self.cold_iters += res.iters
+        return res
+
+
+def _pipeline(eng, query, probe, *, dr_q: int = 500):
+    """Warm-threaded cascade + dual reducer, all LPs through ``probe``."""
+    hier = eng.hierarchy
+    S = np.arange(hier.layers[hier.L].size)
+    ws = None
+    marks = {}
+    for l in range(hier.L, 0, -1):
+        from repro.core.neighbor import neighbor_sampling
+        from repro.core.shading import FALLBACK_SEED
+        c, A, bl, bu, ub = query.matrices(hier.layers[l].table, S)
+        res = probe(c, A, bl, bu, ub, warm_start=ws, max_iters=20000)
+        s_prime = S[res.x > 1e-9] if res.status == OPTIMAL \
+            else np.zeros(0, np.int64)
+        if len(s_prime) == 0:
+            # same fallback as shading(): seed with top-k by objective
+            # (no second LP solve — every probe'd LP stays paired)
+            obj = hier.layers[l].table[query.objective_attr][S]
+            order = np.argsort(-obj if query.maximize else obj,
+                               kind="stable")
+            s_prime = S[order[:FALLBACK_SEED]]
+            res = None
+        S_next = neighbor_sampling(hier, l, hier.alpha, s_prime,
+                                   query.objective_attr, query.maximize)
+        ws = map_warm_basis(hier, l, S, res, S_next,
+                            obj_attr=query.objective_attr)
+        S = S_next
+    marks["cascade"] = (probe.warm_iters, probe.cold_iters)
+    c, A, bl, bu, ub = query.matrices(eng.table, S)
+    lp1 = probe(c, A, bl, bu, ub, warm_start=ws)
+    obj = None
+    if lp1.status == OPTIMAL:
+        E = float(np.sum(lp1.x))
+        ub_aux = np.minimum(ub, max(E / dr_q, 1e-9))
+        aux = probe(c, A, bl, bu, ub_aux, warm_start=lp1)
+        marks["reducer_lps"] = (probe.warm_iters, probe.cold_iters)
+        support = lp1.x > 1e-9
+        if aux.status == OPTIMAL:
+            support |= aux.x > 1e-9
+        sel = np.flatnonzero(support)
+        sub = S[sel]
+        cs, As, _, _, ubs = query.matrices(eng.table, sub)
+        from repro.core.dual_reducer import _subset_warm
+        res_i = ilp_mod.solve_ilp(cs, As, bl, bu, ubs, max_nodes=250,
+                                  time_limit_s=20,
+                                  warm_start=_subset_warm(lp1, sel, len(S)))
+        marks["sub_ilp"] = (probe.warm_iters, probe.cold_iters)
+        obj = res_i.obj if res_i.feasible else None
+    return marks, obj
+
+
+def _per_iteration_work(record, full: bool) -> None:
+    """Revised engine (incremental Binv/d/xB, refactor every 64) vs the
+    textbook per-iteration recompute (refactor_every=1 rebuilds the
+    inverse, reduced costs and xB from scratch each pivot — the seed
+    engine's work profile) on a large package LP.  Same pivot rules, same
+    optimum; the wall-clock ratio is the per-iteration sweep reduction."""
+    rng = np.random.default_rng(0)
+    n = 1_000_000 if full else 200_000
+    m = 12
+    c = rng.normal(size=n)
+    A = np.stack([np.ones(n)] + [
+        rng.normal(rng.uniform(-5, 15), rng.uniform(1, 3), n)
+        for _ in range(m - 1)])
+    x0 = np.zeros(n)
+    x0[rng.choice(n, 30, replace=False)] = 1.0
+    act = A @ x0
+    w = np.maximum(np.abs(act) * 0.02, 0.5)
+    bl, bu = act - w, act + w
+    ub = np.ones(n)
+
+    def best_of(k, **kw):
+        best, res = np.inf, None
+        for _ in range(k):
+            t0 = time.time()
+            res = solve_lp_np(c, A, bl, bu, ub, max_iters=20000, **kw)
+            best = min(best, time.time() - t0)
+        return res, best
+
+    fast, t_fast = best_of(2)
+    slow, t_slow = best_of(2, refactor_every=1)
+    assert fast.status == slow.status == OPTIMAL
+    assert abs(fast.obj - slow.obj) <= 1e-6 * (1 + abs(fast.obj))
+    us_fast = t_fast / max(fast.iters, 1) * 1e6
+    us_slow = t_slow / max(slow.iters, 1) * 1e6
+    emit("lp_engine_revised_us_per_iter", us_fast,
+         f"n={n};iters={fast.iters}")
+    emit("lp_engine_textbook_us_per_iter", us_slow,
+         f"n={n};iters={slow.iters};speedup={us_slow / us_fast:.2f}x")
+    record["per_iteration"] = {
+        "n": n, "revised_us_per_iter": round(us_fast, 1),
+        "textbook_us_per_iter": round(us_slow, 1),
+        "revised_iters": fast.iters, "textbook_iters": slow.iters,
+        "speedup": round(us_slow / us_fast, 3)}
+
+
+def run(full: bool = False) -> None:
+    n = 120_000 if full else 30_000
+    eng = build_engine("sdss", n, d_f=8, alpha=600)
+    eng.partition()
+    record = {"n": n,
+              "layers": [l.size for l in eng.hierarchy.layers],
+              "queries": []}
+    tot_w = tot_c = 0
+    orig_ilp_lp = ilp_mod.solve_lp_np
+    for h in ([1, 3, 5, 7] if full else [1, 3, 5]):
+        query = query_for(eng, "Q1_SDSS", h)
+        probe = _PairedProbe()
+        # route the B&B node re-solves through the probe as well
+        ilp_mod.solve_lp_np = probe
+        try:
+            t0 = time.time()
+            marks, obj = _pipeline(eng, query, probe)
+            dt = time.time() - t0
+        finally:
+            ilp_mod.solve_lp_np = orig_ilp_lp
+        # de-cumulate the phase marks
+        phases = {}
+        prev = (0, 0)
+        for name in ("cascade", "reducer_lps", "sub_ilp"):
+            if name in marks:
+                w, c = marks[name]
+                phases[name] = {"warm": w - prev[0], "cold": c - prev[1]}
+                prev = marks[name]
+        tot_w += probe.warm_iters
+        tot_c += probe.cold_iters
+        emit(f"warm_start_h{h}", dt * 1e6,
+             f"warm_iters={probe.warm_iters};cold_iters={probe.cold_iters};"
+             f"lps={probe.n_lps};warmed={probe.n_warmed}")
+        record["queries"].append({
+            "h": h, "phases": phases,
+            "warm_iters": probe.warm_iters, "cold_iters": probe.cold_iters,
+            "lps": probe.n_lps, "warmed": probe.n_warmed,
+            "feasible": obj is not None, "seconds": round(dt, 3)})
+    record["total_warm_iters"] = tot_w
+    record["total_cold_iters"] = tot_c
+    record["iters_speedup"] = round(tot_c / max(tot_w, 1), 3)
+    _per_iteration_work(record, full)
+    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("warm_start_total", 0.0,
+         f"cold_iters={tot_c};warm_iters={tot_w};"
+         f"speedup={record['iters_speedup']}x;json={BENCH_PATH.name}")

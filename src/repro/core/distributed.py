@@ -22,9 +22,26 @@ from __future__ import annotations
 import functools
 from typing import Tuple
 
+import inspect
+
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:                                  # jax >= 0.6 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                   # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compat wrapper: new jax spells the replication check
+    ``check_vma``; the 0.4.x experimental API calls it ``check_rep``."""
+    params = inspect.signature(_shard_map).parameters
+    kw = {"check_vma": check_vma} if "check_vma" in params else \
+        {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 NUM_BUCKETS = 128

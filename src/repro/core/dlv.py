@@ -66,14 +66,29 @@ def dlv_1d_partition(values: np.ndarray, beta: float):
 
 
 def ratio_score(values: np.ndarray, gid: np.ndarray) -> float:
-    """Definition 2: sum of per-partition variances / total variance."""
+    """Definition 2: sum of per-partition variances / total variance.
+
+    Single vectorised pass: per-group count/sum/sum-of-squares via
+    ``np.bincount`` (O(n + G) instead of the old O(G * n) per-group scan;
+    called per attribute in the partitioning benchmarks)."""
+    values = np.asarray(values, np.float64)
     tot = float(np.var(values))
     if tot <= 0:
         return 0.0
-    s = 0.0
-    for g in np.unique(gid):
-        s += float(np.var(values[gid == g]))
-    return s / tot
+    gid = np.asarray(gid)
+    if gid.dtype.kind not in "iu" or (len(gid) and
+                                      (gid.min() < 0
+                                       or gid.max() >= len(gid))):
+        # sparse/non-integer ids: compact them so bincount stays O(n)
+        _, gid = np.unique(gid, return_inverse=True)
+    shift = values.mean()              # numerical stabilisation
+    v = values - shift
+    cnt = np.bincount(gid)
+    s1 = np.bincount(gid, weights=v)
+    s2 = np.bincount(gid, weights=v * v)
+    nz = cnt > 0
+    var_g = s2[nz] / cnt[nz] - (s1[nz] / cnt[nz]) ** 2
+    return float(np.maximum(var_g, 0.0).sum()) / tot
 
 
 # ------------------------------------------------------ GetScaleFactors

@@ -5,6 +5,13 @@ per-variable upper bound E/q (E = ||x*||_1) that spreads the support to
 ~q variables, then a sub-ILP over the union of both supports; exponential
 fallback (double q, uniformly sample additional tuples) guarantees
 solvability whenever the full ILP is feasible (up to node limits).
+
+Warm starts (revised dual simplex, core.lp): the auxiliary LP differs
+from the first LP ONLY in upper bounds — the textbook dual-simplex
+warm-start case — so it reuses lp1's final basis directly; the fallback
+sub-ILP root LPs re-map lp1's basis onto the selected columns.  The
+caller (progressive_shading) may pass ``warm_start`` to seed lp1 itself
+from the last Shading layer's basis.
 """
 from __future__ import annotations
 
@@ -14,7 +21,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import ilp as ilp_mod
-from repro.core.lp import INFEASIBLE, OPTIMAL, solve_lp_np
+from repro.core.lp import INFEASIBLE, OPTIMAL, LPResult, WarmStart, \
+    fill_warm_basis, solve_lp_np
 from repro.core.paql import PackageQuery
 
 
@@ -34,21 +42,43 @@ class PackageResult:
         return (abs(self.obj) + eps) / (abs(self.lp_obj) + eps)
 
 
+def _subset_warm(lp1: LPResult, sel: np.ndarray, n: int) -> Optional[WarmStart]:
+    """Re-map lp1's basis (over all n columns of S) onto the columns in
+    ``sel``; basic columns outside sel become unused slacks."""
+    m = len(lp1.y)
+    n_sub = len(sel)
+    pos = np.full(n, -1, np.int64)
+    pos[sel] = np.arange(n_sub)
+    new_basis = np.full(m, -1, np.int64)
+    for k, j in enumerate(np.asarray(lp1.basis, np.int64)):
+        if j >= n:
+            new_basis[k] = n_sub + (j - n)
+        elif pos[j] >= 0:
+            new_basis[k] = pos[j]
+    new_basis = fill_warm_basis(new_basis, n_sub, m)
+    if new_basis is None:
+        return None
+    at_upper = np.concatenate([lp1.at_upper[:n][sel], lp1.at_upper[n:]])
+    return WarmStart(new_basis, at_upper)
+
+
 def dual_reducer(query: PackageQuery, table: Dict[str, np.ndarray],
                  S: np.ndarray, *, q: int = 500,
                  rng: Optional[np.random.Generator] = None,
                  max_lp_iters: int = 20000,
                  ilp_kwargs: Optional[dict] = None,
-                 aux: str = "lp") -> PackageResult:
+                 aux: str = "lp", warm_start=None) -> PackageResult:
     """aux: 'lp' (paper's auxiliary LP, line 4-5) | 'random' (Mini-Exp 4
-    ablation: random sample of ~q tuples instead)."""
+    ablation: random sample of ~q tuples instead).  warm_start seeds the
+    first LP (see module docstring)."""
     rng = rng or np.random.default_rng(0)
     ilp_kwargs = dict(ilp_kwargs or {})
     S = np.asarray(S)
     n = len(S)
     c, A, bl, bu, ub = query.matrices(table, S)
 
-    lp1 = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters)
+    lp1 = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters,
+                      warm_start=warm_start)
     if lp1.status != OPTIMAL:
         return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
                              0.0, 0.0, status="lp_infeasible")
@@ -61,7 +91,9 @@ def dual_reducer(query: PackageQuery, table: Dict[str, np.ndarray],
     else:
         E = float(np.sum(lp1.x))
         ub_aux = np.minimum(ub, max(E / max(q, 1), 1e-9))
-        lp2 = solve_lp_np(c, A, bl, bu, ub_aux, max_iters=max_lp_iters)
+        # same c/A, only tighter upper bounds: textbook dual warm start
+        lp2 = solve_lp_np(c, A, bl, bu, ub_aux, max_iters=max_lp_iters,
+                          warm_start=lp1)
         if lp2.status == OPTIMAL:
             support |= lp2.x > tol
     sel = np.flatnonzero(support)
@@ -70,7 +102,9 @@ def dual_reducer(query: PackageQuery, table: Dict[str, np.ndarray],
     while True:
         sub = S[sel]
         cs, As, _, _, ubs = query.matrices(table, sub)
-        res = ilp_mod.solve_ilp(cs, As, bl, bu, ubs, **ilp_kwargs)
+        res = ilp_mod.solve_ilp(cs, As, bl, bu, ubs,
+                                warm_start=_subset_warm(lp1, sel, n),
+                                **ilp_kwargs)
         if res.feasible:
             mult = res.x
             nz = mult > 0.5

@@ -6,6 +6,12 @@ cheap; best-first search with a most-fractional branching rule and a
 round-and-check incumbent heuristic handles the Dual Reducer sub-ILPs
 (q ≈ 500 variables) comfortably.
 
+Every node LP differs from its parent's only in one variable's bounds, so
+node re-solves (and the diving / feasibility-pump LPs) are warm-started
+from the parent basis — the textbook dual-simplex case (core.lp); the
+root accepts an external ``warm_start`` (Dual Reducer passes lp1's basis
+re-mapped onto the sub-ILP columns).
+
 Minimisation form throughout (PackageQuery.matrices already negates
 MAXIMIZE objectives).
 """
@@ -31,6 +37,7 @@ class ILPResult:
     obj: float               # minimisation objective
     nodes: int
     lp_obj: float            # root relaxation bound
+    lp_iters: int = 0        # total simplex iterations across node re-solves
 
     @property
     def feasible(self) -> bool:
@@ -45,7 +52,8 @@ def _round_feasible(x, c, A, bl, bu, lb, ub, tol):
     return None, np.inf
 
 
-def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400):
+def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400,
+          warm_start=None):
     """LP-guided fractional diving.
 
     Package-query LPs have at most m fractional (basic) variables, so
@@ -55,10 +63,13 @@ def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400):
     windows where naive rounding fails.
     """
     lbd, ubd = lb.copy(), ub.copy()
+    warm = warm_start
     for _ in range(max_steps):
-        res = solve_lp_np(c, A, bl, bu, ubd, lb=lbd, max_iters=max_lp_iters)
+        res = solve_lp_np(c, A, bl, bu, ubd, lb=lbd, max_iters=max_lp_iters,
+                          warm_start=warm)
         if res.status != OPTIMAL:
             return None, np.inf
+        warm = res
         x = res.x
         frac = np.abs(x - np.round(x))
         j = int(np.argmax(frac))
@@ -74,9 +85,10 @@ def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400):
             lb2, ub2 = lbd.copy(), ubd.copy()
             lb2[j] = ub2[j] = v
             probe = solve_lp_np(c, A, bl, bu, ub2, lb=lb2,
-                                max_iters=max_lp_iters)
+                                max_iters=max_lp_iters, warm_start=warm)
             if probe.status == OPTIMAL:
                 lbd, ubd = lb2, ub2
+                warm = probe
                 break
         else:
             return None, np.inf
@@ -148,7 +160,7 @@ def _swap_search(x0, c, A, bl, bu, lb, ub, tol, *, max_moves=200):
 
 
 def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
-                      max_rounds=120, seed=0):
+                      max_rounds=120, seed=0, warm_start=None):
     """Objective feasibility pump (Fischetti-Glover-Lodi) for the tight
     BETWEEN-window packages where rounding/diving stall.
 
@@ -159,7 +171,8 @@ def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
     rng = np.random.default_rng(seed)
     n = len(c)
     cn = c / (np.linalg.norm(c) + 1e-12)
-    res = solve_lp_np(c, A, bl, bu, ub, lb=lb, max_iters=max_lp_iters)
+    res = solve_lp_np(c, A, bl, bu, ub, lb=lb, max_iters=max_lp_iters,
+                      warm_start=warm_start)
     if res.status != OPTIMAL:
         return None, np.inf
     x_tilde = np.clip(np.round(res.x), lb, ub)
@@ -172,8 +185,11 @@ def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
         # distance objective: push x toward x_tilde
         c_dist = np.where(x_tilde <= lb + 0.5, 1.0,
                           np.where(x_tilde >= ub - 0.5, -1.0, 0.0))
+        # NOTE: the objective changes between pump rounds, so only the
+        # previous pump LP's basis (not its at_upper pattern, which the
+        # engine re-derives from the new reduced costs) carries over.
         res = solve_lp_np(c_dist + w * cn, A, bl, bu, ub, lb=lb,
-                          max_iters=max_lp_iters)
+                          max_iters=max_lp_iters, warm_start=res)
         if res.status != OPTIMAL:
             return None, np.inf
         new_tilde = np.clip(np.round(res.x), lb, ub)
@@ -195,8 +211,9 @@ def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
 
 def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
               max_nodes: int = 5000, tol: float = 1e-6,
-              time_limit_s: float = 60.0, max_lp_iters: int = 8000
-              ) -> ILPResult:
+              time_limit_s: float = 60.0, max_lp_iters: int = 8000,
+              warm_start=None, warm_nodes: bool = True) -> ILPResult:
+    """warm_nodes=False disables node-LP warm starting (benchmark knob)."""
     c = np.asarray(c, np.float64)
     A = np.atleast_2d(np.asarray(A, np.float64))
     m, n = A.shape
@@ -205,9 +222,12 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     ub0 = np.asarray(ub, np.float64)
     lb0 = np.zeros(n) if lb is None else np.asarray(lb, np.float64)
 
-    root = solve_lp_np(c, A, bl, bu, ub0, lb=lb0, max_iters=max_lp_iters)
+    root = solve_lp_np(c, A, bl, bu, ub0, lb=lb0, max_iters=max_lp_iters,
+                       warm_start=warm_start)
+    lp_iters = root.iters
     if root.status == INFEASIBLE:
-        return ILPResult(ILP_INFEASIBLE, np.zeros(n), np.inf, 1, np.inf)
+        return ILPResult(ILP_INFEASIBLE, np.zeros(n), np.inf, 1, np.inf,
+                         lp_iters)
     root_obj = root.obj
 
     best_x, best_obj = _round_feasible(root.x, c, A, bl, bu, lb0, ub0, tol)
@@ -228,10 +248,10 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                 break
     if best_x is None:
         best_x, best_obj = _dive(c, A, bl, bu, lb0, ub0, tol, max_lp_iters,
-                                 max_steps=4 * m + 8)
+                                 max_steps=4 * m + 8, warm_start=root)
     if best_x is None:
         best_x, best_obj = _feasibility_pump(c, A, bl, bu, lb0, ub0, tol,
-                                             max_lp_iters)
+                                             max_lp_iters, warm_start=root)
     if best_x is not None:
         bx, bo = _swap_search(best_x, c, A, bl, bu, lb0, ub0, tol)
         if bx is not None and bo < best_obj:
@@ -239,7 +259,8 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
 
     heap = []
     counter = itertools.count()
-    heapq.heappush(heap, (root.obj, next(counter), lb0, ub0, root.x))
+    heapq.heappush(heap, (root.obj, next(counter), lb0, ub0, root.x,
+                          root.warm))
     nodes = 0
     t0 = time.time()
     status = ILP_OPTIMAL
@@ -247,7 +268,7 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
         if nodes >= max_nodes or (time.time() - t0) > time_limit_s:
             status = ILP_LIMIT
             break
-        bound, _, lbn, ubn, xlp = heapq.heappop(heap)
+        bound, _, lbn, ubn, xlp, node_warm = heapq.heappop(heap)
         if bound >= best_obj - 1e-9:
             continue
         nodes += 1
@@ -266,8 +287,12 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                 continue
             lb2, ub2 = lbn.copy(), ubn.copy()
             lb2[j], ub2[j] = lo_j, hi_j
+            # child differs from parent in one variable's bounds only:
+            # warm-start the dual simplex from the parent's basis
             res = solve_lp_np(c, A, bl, bu, ub2, lb=lb2,
-                              max_iters=max_lp_iters)
+                              max_iters=max_lp_iters,
+                              warm_start=node_warm if warm_nodes else None)
+            lp_iters += res.iters
             if res.status == INFEASIBLE:
                 continue
             if res.obj >= best_obj - 1e-9:
@@ -275,15 +300,16 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
             xi, obj = _round_feasible(res.x, c, A, bl, bu, lb2, ub2, tol)
             if obj < best_obj:
                 best_obj, best_x = obj, xi
-            heapq.heappush(heap, (res.obj, next(counter), lb2, ub2, res.x))
+            heapq.heappush(heap, (res.obj, next(counter), lb2, ub2, res.x,
+                                  res.warm))
 
     if best_x is None:
         st = ILP_INFEASIBLE if status == ILP_OPTIMAL else ILP_LIMIT
-        return ILPResult(st, np.zeros(n), np.inf, nodes, root_obj)
+        return ILPResult(st, np.zeros(n), np.inf, nodes, root_obj, lp_iters)
     st = status if status == ILP_LIMIT else ILP_OPTIMAL
     if st == ILP_LIMIT:
         st = ILP_FEASIBLE
-    return ILPResult(st, best_x, best_obj, nodes, root_obj)
+    return ILPResult(st, best_x, best_obj, nodes, root_obj, lp_iters)
 
 
 def brute_force_ilp(c, A, bl, bu, ub) -> ILPResult:

@@ -1,4 +1,5 @@
-"""(Parallel) Dual Simplex with Bound-Flipping Ratio Test — paper §2.3 + App. B/C.
+"""Revised (Parallel) Dual Simplex with Bound-Flipping Ratio Test —
+paper §2.3 + App. B/C.
 
 Solves the package-query LP in bounded standard form:
 
@@ -11,14 +12,44 @@ internally rewritten (Appendix B.1) with slacks s = Ãx̃:
 
 Structure exploited exactly as the paper does:
   * m is tiny (3–20) and n is huge -> the basis inverse is a dense m×m
-    matrix recomputed directly (App. C.2 — no LU updates needed),
-  * phase-1 is free: the slack basis is dual-feasible after setting each
-    nonbasic variable to the bound matching sign(c) (App. C.1),
+    matrix (App. C.2),
+  * phase-1 is free: ANY nonsingular basis is dual-feasible after setting
+    each nonbasic variable to the bound matching the sign of its reduced
+    cost (App. C.1) — this is also what makes warm starting safe,
   * the two O(n) steps per iteration — pricing (alpha = rho @ A) and the
     BFRT breakpoint scan — are embarrassingly parallel over n (App. C.3);
     here they are vectorised (numpy / jnp) and, on TPU, backed by the
     Pallas kernels in ``repro.kernels`` and the shard_map distribution in
     ``repro.core.distributed``.
+
+Revised-simplex invariants (maintained between pivots, App. C custom loop):
+  * ``Binv``    — basis inverse, updated by a Sherman–Morrison /
+    product-form rank-1 update per pivot (O(m^2)), refactorized from
+    scratch every ``REFACTOR_EVERY`` pivots for f64 stability;
+  * ``d``       — reduced costs c - Aᵀy, updated by one O(n) axpy
+    ``d -= theta * alpha`` per pivot (exact zeros pinned on the basis);
+  * ``y``       — duals, updated by ``y += theta * rho`` (O(m));
+  * ``xB``      — basic primal values, updated incrementally after bound
+    flips (O(m * |flips|) in the numpy twin; one masked matvec in the
+    fixed-shape JAX twins) and the basis exchange (O(m)).
+  The ONLY O(mn) sweep of A inside the pivot loop is the pricing pass
+  ``alpha = rho @ A`` (the Pallas kernel in ``repro.kernels.pricing``).
+  Whenever optimality or dual unboundedness is about to be declared on
+  stale (rank-1-updated) factors, the engine refactorizes first and
+  re-checks, so the ``verify_optimality`` certificate is always produced
+  from a fresh factorization.
+
+Warm-start contract:
+  ``solve_lp_np`` / ``solve_lp`` / ``solve_lp_kernel`` accept
+  ``warm_start=`` — an ``LPResult``, a ``WarmStart``, or a
+  ``(basis, at_upper)`` tuple.  ``basis`` must hold m column indices into
+  THIS LP's n+m columns (callers re-map indices when the column set
+  changed, cf. ``repro.core.shading.map_warm_basis``); ``at_upper`` is an
+  optional (n+m,) hint used only for columns with a ~zero reduced cost.
+  The engine validates the basis (shape, uniqueness, nonsingularity,
+  no dual-infeasible column pinned at an infinite bound) and silently
+  falls back to the cold all-slack start when invalid — a warm start can
+  only change the iteration count, never the answer.
 
 Two twin implementations with identical pivot rules:
   solve_lp_np  — numpy, used by branch & bound re-solves and as the oracle,
@@ -34,6 +65,7 @@ import numpy as np
 
 OPTIMAL, ITER_LIMIT, INFEASIBLE = 0, 1, 2
 _TOL = 1e-9
+REFACTOR_EVERY = 64   # pivots between full refactorizations (f64 stability)
 
 
 @dataclasses.dataclass
@@ -49,6 +81,28 @@ class LPResult:
     @property
     def feasible(self) -> bool:
         return self.status == OPTIMAL
+
+    @property
+    def warm(self) -> "WarmStart":
+        """Warm-start handle for a sibling LP over the same columns."""
+        return WarmStart(self.basis, self.at_upper)
+
+
+@dataclasses.dataclass
+class WarmStart:
+    """Starting basis for the dual simplex (see module docstring)."""
+    basis: np.ndarray
+    at_upper: Optional[np.ndarray] = None
+
+
+def _unpack_warm(warm_start):
+    """Accept LPResult / WarmStart / (basis, at_upper) / None."""
+    if warm_start is None:
+        return None, None
+    if hasattr(warm_start, "basis"):
+        return warm_start.basis, getattr(warm_start, "at_upper", None)
+    basis, at_upper = warm_start
+    return basis, at_upper
 
 
 def standard_form(c, A_t, bl, bu, ub):
@@ -69,9 +123,88 @@ def row_scaling(A_t) -> np.ndarray:
     return np.where(mx > 0, 1.0 / mx, 1.0)
 
 
-def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
-                max_iters: int = 5000, tol: float = 1e-7) -> LPResult:
-    """Bounded dual simplex with BFRT (numpy twin)."""
+def _cold_start(cf, l, n, N):
+    """All-slack basis, nonbasic at the bound matching sign(c) (App. C.1)."""
+    basis = np.arange(n, N)
+    in_basis = np.zeros(N, bool)
+    in_basis[basis] = True
+    at_upper = np.zeros(N, bool)
+    at_upper[:n] = (cf[:n] < 0) | np.isinf(l[:n])
+    return basis, in_basis, at_upper
+
+
+def _warm_state(cf, A, l, u, warm_basis, at_upper_hint, tol):
+    """Validate a warm basis; returns
+    (basis, in_basis, at_upper, Binv, y, d) or None.
+
+    Dual feasibility is restored for free by placing every nonbasic column
+    at the bound matching the sign of its reduced cost; the ``at_upper``
+    hint only decides columns whose reduced cost is ~zero (degenerate),
+    which preserves the warm solve's primal point.  The factors computed
+    for validation (Binv, y, d) are returned so the solver can seed its
+    state without refactorizing again.
+    """
+    m, N = A.shape
+    basis = np.asarray(warm_basis, np.int64).ravel()
+    if basis.shape != (m,):
+        return None
+    if basis.min() < 0 or basis.max() >= N or len(np.unique(basis)) != m:
+        return None
+    try:
+        Binv = np.linalg.inv(A[:, basis])
+    except np.linalg.LinAlgError:
+        return None
+    if not np.all(np.isfinite(Binv)) or np.abs(Binv).max() > 1e12:
+        return None
+    in_basis = np.zeros(N, bool)
+    in_basis[basis] = True
+    y = Binv.T @ cf[basis]
+    d = cf - A.T @ y
+    d[basis] = 0.0
+    hint = np.zeros(N, bool)
+    if at_upper_hint is not None:
+        h = np.asarray(at_upper_hint, bool).ravel()
+        if h.shape == (N,):
+            hint = h.copy()
+    at_upper = np.where(d < -tol, True, np.where(d > tol, False, hint))
+    at_upper |= np.isinf(l)            # -inf lower: must sit at upper
+    at_upper &= ~np.isinf(u)           # +inf upper: must sit at lower
+    # a nonbasic column whose reduced-cost sign demands an infinite bound
+    # cannot be made dual-feasible by bound placement -> reject the basis
+    bad = (~in_basis) & (((d < -tol) & np.isinf(u))
+                         | ((d > tol) & np.isinf(l))
+                         | (np.isinf(l) & np.isinf(u)))
+    if np.any(bad):
+        return None
+    at_upper[in_basis] = False
+    return basis.copy(), in_basis, at_upper, Binv, y, d
+
+
+def fill_warm_basis(new_basis, n_new: int, m: int):
+    """Shared warm-basis remap tail (shading / dual_reducer): replace
+    unmapped (-1) entries with unused slack columns of the new LP;
+    returns an int64 basis or None if duplicates remain."""
+    used = set(int(b) for b in new_basis if b >= 0)
+    free = [n_new + i for i in range(m) if n_new + i not in used]
+    out = []
+    for b in new_basis:
+        if b < 0:
+            if not free:
+                return None
+            b = free.pop(0)
+        out.append(int(b))
+    if len(set(out)) != m:
+        return None
+    return np.asarray(out, np.int64)
+
+
+def _prep(c, A_t, bl, bu, ub, lb, warm_start, tol=1e-7):
+    """Shared solver setup: scale, standard form, warm-basis validation.
+
+    Returns (arrs, scale, m, n, (basis0, at_upper0, winit)) where arrs is
+    None for an infeasible box and winit is the validated warm state
+    (basis, in_basis, at_upper, Binv, y, d) or None for a cold start.
+    """
     c = np.asarray(c, np.float64)
     A_t = np.atleast_2d(np.asarray(A_t, np.float64))
     m, n = A_t.shape
@@ -83,47 +216,99 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     if lb is not None:
         l[:n] = lb
     N = n + m
-    # infeasible box
     if np.any(l > u + tol):
+        return None, scale, m, n, None
+    wb, wh = _unpack_warm(warm_start)
+    winit = _warm_state(cf, A, l, u, wb, wh, tol) if wb is not None else None
+    if winit is None:
+        basis0, _, at_upper0 = _cold_start(cf, l, n, N)
+    else:
+        basis0, _, at_upper0 = winit[:3]
+    return (cf, A, l, u), scale, m, n, (basis0, at_upper0, winit)
+
+
+def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
+                max_iters: int = 5000, tol: float = 1e-7,
+                warm_start=None,
+                refactor_every: int = REFACTOR_EVERY) -> LPResult:
+    """Bounded revised dual simplex with BFRT (numpy twin).
+
+    Maintains Binv (rank-1 product-form updates), reduced costs d (one
+    O(n) axpy per pivot) and xB (O(m*|flips|)) incrementally; the pricing
+    matvec ``rho @ A`` is the only O(mn) work per iteration.
+    """
+    arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start,
+                                     tol)
+    N = n + m
+    if arrs is None:
         return LPResult(INFEASIBLE, np.zeros(n), 0.0, 0,
                         np.arange(n, N), np.zeros(N, bool), np.zeros(m))
-
-    basis = np.arange(n, N)
+    cf, A, l, u = arrs
+    basis0, at_upper0, winit = start
+    basis = basis0.copy()
+    at_upper = at_upper0.copy()
     in_basis = np.zeros(N, bool)
     in_basis[basis] = True
-    # phase-1 for free (App. C.1): nonbasic at the bound matching sign(c)
-    at_upper = np.zeros(N, bool)
-    at_upper[:n] = cf[:n] < 0
-    # variables with infinite lower bound must start at their (finite) upper
-    at_upper[:n] |= np.isinf(l[:n])
+    if winit is not None:
+        # reuse the factors computed during warm-basis validation
+        _, _, _, Binv, y, d = winit
+        xN = np.where(in_basis, 0.0, np.where(at_upper, u, l))
+        xN[basis] = 0.0
+        xB = -Binv @ (A @ xN)
+        since = 0
+    else:
+        Binv = np.eye(m)
+        xB = np.zeros(m)
+        y = np.zeros(m)
+        d = cf.copy()
+        since = refactor_every      # force a full factorization first
 
-    status = ITER_LIMIT
-    iters = 0
-    for iters in range(1, max_iters + 1):
+    def refresh():
+        nonlocal Binv, xB, y, d, since
         Binv = np.linalg.inv(A[:, basis])
         xN = np.where(in_basis, 0.0, np.where(at_upper, u, l))
         xN[basis] = 0.0
         xB = -Binv @ (A @ xN)
+        y = Binv.T @ cf[basis]
+        d = cf - A.T @ y
+        d[basis] = 0.0
+        since = 0
+
+    status = ITER_LIMIT
+    iters = 0
+    for iters in range(1, max_iters + 1):
+        if since >= refactor_every:
+            refresh()
         lB, uB = l[basis], u[basis]
         viol_lo = lB - xB
         viol_hi = xB - uB
         viol = np.maximum(viol_lo, viol_hi)
         r = int(np.argmax(viol))
+        if viol[r] <= tol and since > 0:
+            # about to declare optimality on drifted factors: refactorize
+            # and re-check so the certificate is exact
+            refresh()
+            viol_lo = lB - xB
+            viol_hi = xB - uB
+            viol = np.maximum(viol_lo, viol_hi)
+            r = int(np.argmax(viol))
         if viol[r] <= tol:
             status = OPTIMAL
             break
-        delta = xB[r] - uB[r] if viol_hi[r] >= viol_lo[r] else xB[r] - lB[r]
+        above = viol_hi[r] >= viol_lo[r]
+        delta = xB[r] - (uB[r] if above else lB[r])
         s = 1.0 if delta > 0 else -1.0
 
         rho = Binv[r]
-        alpha = rho @ A                      # pricing: O(mn), parallel over n
-        y = Binv.T @ cf[basis]
-        d = cf - A.T @ y                     # reduced costs
+        alpha = rho @ A           # pricing: the single O(mn) sweep, ∥ over n
 
         sa = s * alpha
         elig = (~in_basis) & (
             ((~at_upper) & (sa > tol)) | (at_upper & (sa < -tol)))
         if not np.any(elig):
+            if since > 0:         # could be drift: retry on fresh factors
+                refresh()
+                continue
             status = INFEASIBLE
             break
         ratio = np.where(elig, d / np.where(np.abs(sa) > tol, sa, 1.0), np.inf)
@@ -141,21 +326,53 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
         budget = abs(delta)
         cross = int(np.searchsorted(csum, budget - 1e-12))
         if cross >= k_elig:
-            status = INFEASIBLE     # dual unbounded: flips cannot absorb
+            if since > 0:         # dual unbounded on stale factors: re-check
+                refresh()
+                continue
+            status = INFEASIBLE   # dual unbounded: flips cannot absorb
             break
         q = int(cand[cross])
         flips = cand[:cross]
 
-        # apply bound flips
-        if len(flips):
-            at_upper[flips] = ~at_upper[flips]
-        # leaving variable goes to the violated bound
+        # ---- incremental pivot (no inv, no full d recompute) ----
         leave = basis[r]
-        at_upper[leave] = delta > 0
+        w = Binv @ A[:, q]                    # entering column in B coords
+        if abs(w[r]) < 1e-11:
+            # numerically unsafe pivot on drifted factors; fresh factors
+            # guarantee |w[r]| = |alpha_q| > tol.  Checked BEFORE any flip
+            # is applied so the retry restarts from a consistent state.
+            if since > 0:
+                refresh()
+                continue
+            break                             # cannot happen; keep ITER_LIMIT
+        if len(flips):
+            # bound flips move xB by -Binv A[:,flips] dx: O(m * |flips|)
+            dxf = np.where(at_upper[flips], l[flips] - u[flips],
+                           u[flips] - l[flips])
+            xB -= Binv @ (A[:, flips] @ dxf)
+            at_upper[flips] = ~at_upper[flips]
+        target = uB[r] if above else lB[r]
+        t = (xB[r] - target) / w[r]
+        xq = u[q] if at_upper[q] else l[q]
+        xB -= t * w
+        xB[r] = xq + t
+        theta = d[q] / w[r]
+        d -= theta * alpha                    # one O(n) axpy
+        d[q] = 0.0
+        d[leave] = -theta
+        y += theta * rho
+        # Sherman–Morrison / product-form rank-1 update of Binv
+        Binv_r = Binv[r] / w[r]
+        Binv -= np.outer(w, Binv_r)
+        Binv[r] = Binv_r
+        at_upper[leave] = above
+        at_upper[q] = False
         in_basis[leave] = False
         in_basis[q] = True
         basis[r] = q
+        since += 1
 
+    # final answer always from a fresh factorization
     Binv = np.linalg.inv(A[:, basis])
     xN = np.where(in_basis, 0.0, np.where(at_upper, u, l))
     xN[basis] = 0.0
@@ -175,33 +392,50 @@ import jax.numpy as jnp
 from functools import partial
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
-def _solve_lp_jax(cf, A, l, u, max_iters: int):
+@partial(jax.jit, static_argnames=("max_iters", "refactor_every"))
+def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
+                  refactor_every: int = REFACTOR_EVERY):
     N = A.shape[1]
     m = A.shape[0]
     n = N - m
     tol = 1e-7
 
-    basis0 = jnp.arange(n, N)
     in_basis0 = jnp.zeros(N, bool).at[basis0].set(True)
-    at_upper0 = jnp.zeros(N, bool).at[:n].set(
-        (cf[:n] < 0) | jnp.isinf(l[:n]))
+    at_upper0 = at_upper0 & ~in_basis0
 
-    def xb_of(basis, in_basis, at_upper):
+    def refreshed(basis, in_basis, at_upper):
         Binv = jnp.linalg.inv(A[:, basis])
         xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
         xN = xN.at[basis].set(0.0)
         xB = -Binv @ (A @ xN)
-        return Binv, xN, xB
+        y = Binv.T @ cf[basis]
+        d = (cf - A.T @ y).at[basis].set(0.0)
+        return Binv, xB, d, y
 
     def cond(state):
-        basis, in_basis, at_upper, status, it = state
+        status, it = state[-3], state[-2]
         return (status == ITER_LIMIT) & (it < max_iters)
 
     def body(state):
-        basis, in_basis, at_upper, status, it = state
-        Binv, xN, xB = xb_of(basis, in_basis, at_upper)
+        (basis, in_basis, at_upper, Binv, xB, d, y, status, it,
+         since) = state
+
+        # NOTE: refresh branches take the factor state as an explicit
+        # operand (not via closure): lax.cond caches branch jaxprs by
+        # function identity, so a closure reused across two cond calls
+        # would replay the FIRST call's captured tracers.
+        def do_ref(ops):
+            return refreshed(basis, in_basis, at_upper) + (jnp.int32(0),)
+
+        Binv, xB, d, y, since = jax.lax.cond(
+            since >= refactor_every, do_ref, lambda ops: ops,
+            (Binv, xB, d, y, since))
         lB, uB = l[basis], u[basis]
+        viol = jnp.maximum(lB - xB, xB - uB)
+        # optimality suspected on stale factors -> refactorize, re-check
+        Binv, xB, d, y, since = jax.lax.cond(
+            (viol[jnp.argmax(viol)] <= tol) & (since > 0), do_ref,
+            lambda ops: ops, (Binv, xB, d, y, since))
         viol_lo = lB - xB
         viol_hi = xB - uB
         viol = jnp.maximum(viol_lo, viol_hi)
@@ -212,9 +446,7 @@ def _solve_lp_jax(cf, A, l, u, max_iters: int):
         delta = jnp.where(above, xB[r] - uB[r], xB[r] - lB[r])
         s = jnp.where(delta > 0, 1.0, -1.0)
         rho = Binv[r]
-        alpha = rho @ A
-        y = Binv.T @ cf[basis]
-        d = cf - A.T @ y
+        alpha = rho @ A                 # pricing: the single O(mn) sweep
 
         sa = s * alpha
         elig = (~in_basis) & (
@@ -230,64 +462,90 @@ def _solve_lp_jax(cf, A, l, u, max_iters: int):
         csum_all = jnp.cumsum(flip_cost[order])
         budget = jnp.abs(delta)
         elig_sorted = elig[order]
-        # crossing point among eligible prefix
         crossed = (csum_all >= budget - 1e-12) & elig_sorted
         cross_pos = jnp.argmax(crossed)          # first True (0 if none)
         has_cross = jnp.any(crossed)
         q = order[cross_pos]
-        flip_mask = elig & (ratio < ratio[q]) & (
-            jnp.arange(N) != q)
         # only flip breakpoints strictly before the crossing in sorted order
-        rank = jnp.empty(N, jnp.int32).at[order].set(jnp.arange(N, dtype=jnp.int32))
+        rank = jnp.empty(N, jnp.int32).at[order].set(
+            jnp.arange(N, dtype=jnp.int32))
         flip_mask = elig & (rank < rank[q])
 
+        stale = since > 0
+        w = Binv @ A[:, q]
+        # numerically unsafe pivot (possible only on drifted factors;
+        # fresh factors guarantee |w[r]| = |alpha_q| > tol) -> no pivot,
+        # force a refactorize-and-retry like the numpy twin
+        unsafe = jnp.abs(w[r]) < 1e-11
+        no_pivot = ~any_elig | ~has_cross
+        # infeasibility on stale factors: force a refactorize-and-retry
+        # instead of declaring; on fresh factors it is genuine
         new_status = jnp.where(done, OPTIMAL,
-                               jnp.where(~any_elig | ~has_cross, INFEASIBLE,
+                               jnp.where(no_pivot & ~stale, INFEASIBLE,
                                          ITER_LIMIT)).astype(jnp.int32)
-        do_pivot = new_status == ITER_LIMIT
+        do_pivot = (new_status == ITER_LIMIT) & ~no_pivot & ~unsafe
 
+        # ---- incremental pivot ----
         leave = basis[r]
-        at_upper2 = jnp.where(flip_mask, ~at_upper, at_upper)
-        at_upper2 = at_upper2.at[leave].set(delta > 0)
+        dxN = jnp.where(flip_mask,
+                        jnp.where(at_upper, l - u, u - l), 0.0)
+        xB2 = xB - Binv @ (A @ dxN)     # flip absorption (masked matvec)
+        at_upper_f = at_upper ^ flip_mask
+        wr = jnp.where(unsafe, 1.0, w[r])
+        target = jnp.where(above, uB[r], lB[r])
+        t = (xB2[r] - target) / wr
+        xq = jnp.where(at_upper_f[q], u[q], l[q])
+        xB3 = (xB2 - t * w).at[r].set(xq + t)
+        theta = d[q] / wr
+        d2 = (d - theta * alpha).at[q].set(0.0).at[leave].set(-theta)
+        y2 = y + theta * rho
+        Binv_r = Binv[r] / wr
+        Binv2 = (Binv - jnp.outer(w, Binv_r)).at[r].set(Binv_r)
+        at_upper2 = at_upper_f.at[leave].set(above).at[q].set(False)
         in_basis2 = in_basis.at[leave].set(False).at[q].set(True)
         basis2 = basis.at[r].set(q)
 
         basis = jnp.where(do_pivot, basis2, basis)
         in_basis = jnp.where(do_pivot, in_basis2, in_basis)
         at_upper = jnp.where(do_pivot, at_upper2, at_upper)
-        return (basis, in_basis, at_upper, new_status,
-                (it + 1).astype(jnp.int32))
+        Binv = jnp.where(do_pivot, Binv2, Binv)
+        xB = jnp.where(do_pivot, xB3, xB)
+        d = jnp.where(do_pivot, d2, d)
+        y = jnp.where(do_pivot, y2, y)
+        since = jnp.where(do_pivot, since + 1,
+                          jnp.where((no_pivot | unsafe) & stale,
+                                    jnp.int32(refactor_every), since))
+        return (basis, in_basis, at_upper, Binv, xB, d, y, new_status,
+                (it + 1).astype(jnp.int32), since.astype(jnp.int32))
 
-    state = (basis0, in_basis0, at_upper0, jnp.int32(ITER_LIMIT), jnp.int32(0))
-    basis, in_basis, at_upper, status, it = jax.lax.while_loop(
-        cond, body, state)
-    Binv, xN, xB = xb_of(basis, in_basis, at_upper)
+    state = (basis0, in_basis0, at_upper0, jnp.eye(m, dtype=A.dtype),
+             jnp.zeros(m, A.dtype), cf, jnp.zeros(m, A.dtype),
+             jnp.int32(ITER_LIMIT), jnp.int32(0),
+             jnp.int32(refactor_every))  # since=K: factorize on entry
+    state = jax.lax.while_loop(cond, body, state)
+    basis, in_basis, at_upper, _, _, _, _, status, it, _ = state
+    Binv, xB, d, y = refreshed(basis, in_basis, at_upper)
+    xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
+    xN = xN.at[basis].set(0.0)
     x = xN.at[basis].set(xB)
-    y = Binv.T @ cf[basis]
     obj = cf @ jnp.where(jnp.isfinite(x), x, 0.0)
     return status, x[:n], obj, it, basis, at_upper, y
 
 
 def solve_lp(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
-             max_iters: int = 5000) -> LPResult:
-    """JAX dual simplex (jit + while_loop).  Same conventions as solve_lp_np."""
-    c = np.asarray(c, np.float64)
-    A_t = np.atleast_2d(np.asarray(A_t, np.float64))
-    m, n = A_t.shape
-    scale = row_scaling(A_t)
-    A_t = A_t * scale[:, None]
-    bl = np.asarray(bl, np.float64) * scale
-    bu = np.asarray(bu, np.float64) * scale
-    cf, A, l, u = standard_form(c, A_t, bl, bu, np.asarray(ub, np.float64))
-    if lb is not None:
-        l[:n] = lb
-    if np.any(l > u + 1e-9):
+             max_iters: int = 5000, warm_start=None) -> LPResult:
+    """JAX revised dual simplex (jit + while_loop).  Same conventions as
+    solve_lp_np, including the warm-start contract."""
+    arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start)
+    if arrs is None:
         return LPResult(INFEASIBLE, np.zeros(n), 0.0, 0,
                         np.arange(n, n + m), np.zeros(n + m, bool),
                         np.zeros(m))
+    cf, A, l, u = arrs
+    basis0, at_upper0, _ = start
     status, x, obj, it, basis, at_upper, y = _solve_lp_jax(
         jnp.asarray(cf), jnp.asarray(A), jnp.asarray(l), jnp.asarray(u),
-        max_iters)
+        jnp.asarray(basis0), jnp.asarray(at_upper0), max_iters)
     return LPResult(int(status), np.asarray(x), float(obj), int(it),
                     np.asarray(basis), np.asarray(at_upper),
                     np.asarray(y) * scale)

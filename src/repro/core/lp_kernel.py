@@ -1,15 +1,18 @@
-"""Dual simplex driven by the Pallas kernels.
+"""Revised dual simplex driven by the Pallas kernels.
 
-Same pivot rules as ``core.lp._solve_lp_jax`` but the two O(n) inner
-procedures run through the TPU kernels:
+Same pivot rules and revised-simplex invariants as ``core.lp``
+(incrementally-maintained Binv / reduced costs / xB, periodic
+refactorization, warm starts) but the O(n) inner procedures run through
+the TPU kernels:
 
-  * pricing (alpha, BFRT ratios, flip costs) -> kernels.pricing (fused,
-    one pass over A),
+  * pricing (alpha, BFRT ratios, flip costs) -> kernels.pricing — with
+    reduced costs maintained by an O(n) axpy between pivots, the kernel
+    is a single fused pass over A (one rank-1 matvec, one HBM read);
   * BFRT breakpoint selection -> kernels.bfrt (bucketed two-pass select).
 
 On CPU the kernels execute in interpret mode (slow, correctness only);
 on TPU they are the production path.  Tested against solve_lp_np on
-random LPs in tests/test_lp_kernel.py.
+random LPs in tests/test_lp_kernel.py and tests/test_warm_start.py.
 """
 from __future__ import annotations
 
@@ -21,38 +24,55 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lp import (INFEASIBLE, ITER_LIMIT, OPTIMAL, LPResult,
-                           row_scaling, standard_form)
+                           REFACTOR_EVERY, _prep)
 from repro.kernels.bfrt import bfrt_select
 from repro.kernels.pricing import pricing
 
 
-@partial(jax.jit, static_argnames=("max_iters", "interpret"))
-def _solve_lp_kernel_jax(cf, A, l, u, max_iters: int, interpret: bool):
+@partial(jax.jit, static_argnames=("max_iters", "interpret",
+                                   "refactor_every"))
+def _solve_lp_kernel_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
+                         interpret: bool,
+                         refactor_every: int = REFACTOR_EVERY):
     N = A.shape[1]
     m = A.shape[0]
     n = N - m
     tol = 1e-7
 
-    basis0 = jnp.arange(n, N)
     in_basis0 = jnp.zeros(N, bool).at[basis0].set(True)
-    at_upper0 = jnp.zeros(N, bool).at[:n].set(
-        (cf[:n] < 0) | jnp.isinf(l[:n]))
+    at_upper0 = at_upper0 & ~in_basis0
 
-    def xb_of(basis, in_basis, at_upper):
+    def refreshed(basis, in_basis, at_upper):
         Binv = jnp.linalg.inv(A[:, basis])
         xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
         xN = xN.at[basis].set(0.0)
         xB = -Binv @ (A @ xN)
-        return Binv, xN, xB
+        y = Binv.T @ cf[basis]
+        d = (cf - A.T @ y).at[basis].set(0.0)
+        return Binv, xB, d, y
 
     def cond(state):
-        _, _, _, status, it = state
+        status, it = state[-3], state[-2]
         return (status == ITER_LIMIT) & (it < max_iters)
 
     def body(state):
-        basis, in_basis, at_upper, status, it = state
-        Binv, xN, xB = xb_of(basis, in_basis, at_upper)
+        (basis, in_basis, at_upper, Binv, xB, d, y, status, it,
+         since) = state
+
+        # refresh branches take the factor state as an explicit operand
+        # (lax.cond caches branch jaxprs by function identity; a closure
+        # reused across cond calls replays stale captured tracers)
+        def do_ref(ops):
+            return refreshed(basis, in_basis, at_upper) + (jnp.int32(0),)
+
+        Binv, xB, d, y, since = jax.lax.cond(
+            since >= refactor_every, do_ref, lambda ops: ops,
+            (Binv, xB, d, y, since))
         lB, uB = l[basis], u[basis]
+        viol = jnp.maximum(lB - xB, xB - uB)
+        Binv, xB, d, y, since = jax.lax.cond(
+            (viol[jnp.argmax(viol)] <= tol) & (since > 0), do_ref,
+            lambda ops: ops, (Binv, xB, d, y, since))
         viol_lo = lB - xB
         viol_hi = xB - uB
         viol = jnp.maximum(viol_lo, viol_hi)
@@ -63,72 +83,96 @@ def _solve_lp_kernel_jax(cf, A, l, u, max_iters: int, interpret: bool):
         delta = jnp.where(above, xB[r] - uB[r], xB[r] - lB[r])
         s = jnp.where(delta > 0, 1.0, -1.0)
         rho = Binv[r]
-        y = Binv.T @ cf[basis]
 
-        # ---- Pallas: fused pricing over all N columns ----
+        # ---- Pallas: fused pricing, the single O(mn) sweep over A ----
         state_code = jnp.where(in_basis, 2,
                                jnp.where(at_upper, 1, 0)).astype(jnp.int32)
         lo_safe = jnp.where(jnp.isfinite(l), l, 0.0)
         width = jnp.where(jnp.isfinite(u - l), u - l, 1e30)
-        alpha, ratio, cost = pricing(A, rho, y, cf, state_code,
+        alpha, ratio, cost = pricing(A, rho, d, state_code,
                                      lo_safe, lo_safe + width, s,
                                      block=min(2048, N),
                                      interpret=interpret)
         # ---- Pallas: bucketed BFRT select ----
-        q, flips, has_cross = bfrt_select(ratio, cost, jnp.abs(delta),
-                                          interpret=interpret)
+        q, flip_mask, has_cross = bfrt_select(ratio, cost, jnp.abs(delta),
+                                              interpret=interpret)
 
+        stale = since > 0
+        w = Binv @ A[:, q]
+        # unsafe pivot on drifted factors -> refactorize-and-retry
+        # (parity with the numpy twin; impossible on fresh factors)
+        unsafe = jnp.abs(w[r]) < 1e-11
+        no_pivot = ~has_cross
         new_status = jnp.where(done, OPTIMAL,
-                               jnp.where(~has_cross, INFEASIBLE,
+                               jnp.where(no_pivot & ~stale, INFEASIBLE,
                                          ITER_LIMIT)).astype(jnp.int32)
-        do_pivot = new_status == ITER_LIMIT
+        do_pivot = (new_status == ITER_LIMIT) & ~no_pivot & ~unsafe
 
+        # ---- incremental pivot (no inv, no full d recompute) ----
         leave = basis[r]
-        at_upper2 = jnp.where(flips, ~at_upper, at_upper)
-        at_upper2 = at_upper2.at[leave].set(delta > 0)
+        dxN = jnp.where(flip_mask,
+                        jnp.where(at_upper, l - u, u - l), 0.0)
+        xB2 = xB - Binv @ (A @ dxN)     # flip absorption (masked matvec)
+        at_upper_f = at_upper ^ flip_mask
+        wr = jnp.where(unsafe, 1.0, w[r])
+        target = jnp.where(above, uB[r], lB[r])
+        t = (xB2[r] - target) / wr
+        xq = jnp.where(at_upper_f[q], u[q], l[q])
+        xB3 = (xB2 - t * w).at[r].set(xq + t)
+        theta = d[q] / wr
+        d2 = (d - theta * alpha).at[q].set(0.0).at[leave].set(-theta)
+        y2 = y + theta * rho
+        Binv_r = Binv[r] / wr
+        Binv2 = (Binv - jnp.outer(w, Binv_r)).at[r].set(Binv_r)
+        at_upper2 = at_upper_f.at[leave].set(above).at[q].set(False)
         in_basis2 = in_basis.at[leave].set(False).at[q].set(True)
         basis2 = basis.at[r].set(q)
 
         basis = jnp.where(do_pivot, basis2, basis)
         in_basis = jnp.where(do_pivot, in_basis2, in_basis)
         at_upper = jnp.where(do_pivot, at_upper2, at_upper)
-        return (basis, in_basis, at_upper, new_status,
-                (it + 1).astype(jnp.int32))
+        Binv = jnp.where(do_pivot, Binv2, Binv)
+        xB = jnp.where(do_pivot, xB3, xB)
+        d = jnp.where(do_pivot, d2, d)
+        y = jnp.where(do_pivot, y2, y)
+        since = jnp.where(do_pivot, since + 1,
+                          jnp.where((no_pivot | unsafe) & stale,
+                                    jnp.int32(refactor_every), since))
+        return (basis, in_basis, at_upper, Binv, xB, d, y, new_status,
+                (it + 1).astype(jnp.int32), since.astype(jnp.int32))
 
-    state = (basis0, in_basis0, at_upper0, jnp.int32(ITER_LIMIT),
-             jnp.int32(0))
-    basis, in_basis, at_upper, status, it = jax.lax.while_loop(
-        cond, body, state)
-    Binv, xN, xB = xb_of(basis, in_basis, at_upper)
+    state = (basis0, in_basis0, at_upper0, jnp.eye(m, dtype=A.dtype),
+             jnp.zeros(m, A.dtype), cf, jnp.zeros(m, A.dtype),
+             jnp.int32(ITER_LIMIT), jnp.int32(0),
+             jnp.int32(refactor_every))  # since=K: factorize on entry
+    state = jax.lax.while_loop(cond, body, state)
+    basis, in_basis, at_upper, _, _, _, _, status, it, _ = state
+    Binv, xB, d, y = refreshed(basis, in_basis, at_upper)
+    xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
+    xN = xN.at[basis].set(0.0)
     x = xN.at[basis].set(xB)
-    y = Binv.T @ cf[basis]
     obj = cf @ jnp.where(jnp.isfinite(x), x, 0.0)
     return status, x[:n], obj, it, basis, at_upper, y
 
 
 def solve_lp_kernel(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                     max_iters: int = 5000,
-                    interpret: Optional[bool] = None) -> LPResult:
-    """Kernel-backed twin of core.lp.solve_lp (same conventions)."""
+                    interpret: Optional[bool] = None,
+                    warm_start=None) -> LPResult:
+    """Kernel-backed twin of core.lp.solve_lp (same conventions, including
+    the warm-start contract)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    c = np.asarray(c, np.float64)
-    A_t = np.atleast_2d(np.asarray(A_t, np.float64))
-    m, n = A_t.shape
-    scale = row_scaling(A_t)
-    A_t = A_t * scale[:, None]
-    bl = np.asarray(bl, np.float64) * scale
-    bu = np.asarray(bu, np.float64) * scale
-    cf, A, l, u = standard_form(c, A_t, bl, bu, np.asarray(ub, np.float64))
-    if lb is not None:
-        l[:n] = lb
-    if np.any(l > u + 1e-9):
+    arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start)
+    if arrs is None:
         return LPResult(INFEASIBLE, np.zeros(n), 0.0, 0,
                         np.arange(n, n + m), np.zeros(n + m, bool),
                         np.zeros(m))
+    cf, A, l, u = arrs
+    basis0, at_upper0, _ = start
     status, x, obj, it, basis, at_upper, y = _solve_lp_kernel_jax(
         jnp.asarray(cf), jnp.asarray(A), jnp.asarray(l), jnp.asarray(u),
-        max_iters, interpret)
+        jnp.asarray(basis0), jnp.asarray(at_upper0), max_iters, interpret)
     return LPResult(int(status), np.asarray(x), float(obj), int(it),
                     np.asarray(basis), np.asarray(at_upper),
                     np.asarray(y) * scale)

@@ -4,28 +4,92 @@ Each Shading step solves the LP relaxation over the current candidate set at
 layer l (Parallel Dual Simplex), keeps the support, and expands/augments via
 Neighbor Sampling down to layer l-1.  At layer 0, Dual Reducer produces the
 final package.
+
+Warm starts down the cascade (App. C customization): consecutive layer LPs
+share the m slack columns and their structural columns are related by the
+parent/child group structure, so layer l's final basis is re-mapped onto
+layer l-1's candidate set by ``map_warm_basis`` — each basic group maps to
+its surviving child representative closest in objective value, slacks map
+index-shifted, and every other (new) column enters nonbasic at the bound
+matching the sign of its reduced cost, which keeps the start dual-feasible
+(core.lp warm-start contract).  The engine validates the mapped basis and
+silently falls back to a cold start when it is singular, so warm starting
+can only change iteration counts, never answers.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.dual_reducer import PackageResult, dual_reducer
 from repro.core.hierarchy import Hierarchy
-from repro.core.lp import OPTIMAL, solve_lp_np
+from repro.core.lp import (OPTIMAL, LPResult, WarmStart, fill_warm_basis,
+                           solve_lp_np)
 from repro.core.neighbor import neighbor_sampling
 from repro.core.paql import PackageQuery
 
 FALLBACK_SEED = 64   # LP-infeasible layer: seed with top-k by objective
 
 
+def map_warm_basis(hier: Hierarchy, l: int, S_l: np.ndarray,
+                   res: Optional[LPResult], S_next: np.ndarray,
+                   obj_attr: Optional[str] = None) -> Optional[WarmStart]:
+    """Re-map layer-l LP basis/bound state onto the layer-(l-1) LP.
+
+    Column j of the layer-l LP is group ``S_l[j]``; column i of the next LP
+    is the layer-(l-1) representative ``S_next[i]`` whose parent group is
+    ``hier.layers[l].part.gid[S_next[i]]``.  Basic groups map to their
+    child in S_next with the closest objective value (the group rep is the
+    member mean, so the closest child is the best stand-in for the basic
+    column); slacks shift by the new n.  Unmappable basic columns are
+    replaced by unused slacks — the engine's validation rejects the basis
+    if that ever makes it singular.
+    """
+    if res is None:
+        return None
+    part = hier.layers[l].part
+    if part is None:
+        return None
+    n_prev, n_next = len(S_l), len(S_next)
+    m = len(res.y)
+    parent = part.gid[S_next]                    # parent group per candidate
+    order = np.argsort(parent, kind="stable")
+    parent_sorted = parent[order]
+
+    attr = obj_attr if obj_attr in hier.attrs else hier.attrs[0]
+    obj_next = np.asarray(hier.layers[l - 1].table[attr], np.float64)
+    obj_prev = np.asarray(hier.layers[l].table[attr], np.float64)
+
+    new_basis = np.full(m, -1, np.int64)
+    for k, j in enumerate(np.asarray(res.basis, np.int64)):
+        if j >= n_prev:                          # slack i -> slack i
+            new_basis[k] = n_next + (j - n_prev)
+            continue
+        g = int(S_l[j])
+        lo = np.searchsorted(parent_sorted, g, side="left")
+        hi = np.searchsorted(parent_sorted, g, side="right")
+        if hi > lo:                              # children present in S_next
+            cand = order[lo:hi]
+            new_basis[k] = int(cand[np.argmin(
+                np.abs(obj_next[S_next[cand]] - obj_prev[g]))])
+    new_basis = fill_warm_basis(new_basis, n_next, m)
+    if new_basis is None:
+        return None
+    # bound-side hint: children inherit their parent group's side
+    au_prev = np.zeros(hier.layers[l].size, bool)
+    au_prev[np.asarray(S_l, np.int64)] = res.at_upper[:n_prev]
+    at_upper = np.concatenate([au_prev[parent], res.at_upper[n_prev:]])
+    return WarmStart(new_basis, at_upper)
+
+
 def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
             query: PackageQuery, *, max_lp_iters: int = 20000,
             layer_solver: str = "lp", sampler: str = "neighbor",
-            rng: Optional[np.random.Generator] = None) -> np.ndarray:
+            rng: Optional[np.random.Generator] = None,
+            warm_start=None, return_state: bool = False):
     """One Shading step (Algorithm 2): layer-l candidates -> layer-(l-1).
 
     Ablation knobs (paper Mini-Experiments 1 and 2):
@@ -33,15 +97,20 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
         ILP — shown not to help);
       sampler: 'neighbor' (Algorithm 3) | 'random' (random representative
         sampling — shown much worse).
+    warm_start: optional basis for the layer LP (see map_warm_basis);
+    return_state: also return the layer LPResult (None for the ilp ablation)
+      so progressive_shading can warm-start the next layer.
     """
     layer_table = hier.layers[l].table
     c, A, bl, bu, ub = query.matrices(layer_table, S_l)
+    res: Optional[LPResult] = None
     if layer_solver == "ilp":
         from repro.core.ilp import solve_ilp
         res_i = solve_ilp(c, A, bl, bu, ub, max_nodes=100, time_limit_s=10)
         s_prime = S_l[res_i.x > 1e-9] if res_i.feasible else np.zeros(0, int)
     else:
-        res = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters)
+        res = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters,
+                          warm_start=warm_start)
         s_prime = S_l[res.x > 1e-9] if res.status == OPTIMAL \
             else np.zeros(0, np.int64)
     if len(s_prime) == 0:
@@ -66,9 +135,13 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
             members.append(m)
             count += len(m)
         cand = np.unique(np.concatenate(members))
-        return cand[:alpha]
-    return neighbor_sampling(hier, l, alpha, s_prime,
-                             query.objective_attr, query.maximize)
+        S_next = cand[:alpha]
+    else:
+        S_next = neighbor_sampling(hier, l, alpha, s_prime,
+                                   query.objective_attr, query.maximize)
+    if return_state:
+        return S_next, res
+    return S_next
 
 
 @dataclasses.dataclass
@@ -86,18 +159,31 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
                         ilp_kwargs: Optional[dict] = None,
                         layer_solver: str = "lp",
                         sampler: str = "neighbor",
-                        dr_aux: str = "lp"
+                        dr_aux: str = "lp",
+                        warm_starts: bool = True
                         ) -> PackageResult:
-    """Algorithm 1: iterate Shading from layer L to 0, then Dual Reducer."""
+    """Algorithm 1: iterate Shading from layer L to 0, then Dual Reducer.
+
+    Each layer's LP is warm-started from the previous layer's final basis
+    (``warm_starts=False`` restores the all-cold seed behaviour for
+    ablations/benchmarks); the layer-1 basis is likewise re-mapped onto the
+    layer-0 candidate set to warm-start Dual Reducer's first LP.
+    """
     t0 = time.time()
     alpha = alpha or hier.alpha
     S = np.arange(hier.layers[hier.L].size)
     sizes = [len(S)]
+    warm = None
     for l in range(hier.L, 0, -1):
-        S = shading(hier, l, alpha, S, query, layer_solver=layer_solver,
-                    sampler=sampler, rng=rng)
+        S_next, lp_res = shading(hier, l, alpha, S, query,
+                                 layer_solver=layer_solver, sampler=sampler,
+                                 rng=rng, warm_start=warm, return_state=True)
+        warm = map_warm_basis(hier, l, S, lp_res, S_next,
+                              obj_attr=query.objective_attr) \
+            if warm_starts else None
+        S = S_next
         sizes.append(len(S))
     res = dual_reducer(query, table, S, q=dr_q, rng=rng,
-                       ilp_kwargs=ilp_kwargs, aux=dr_aux)
+                       ilp_kwargs=ilp_kwargs, aux=dr_aux, warm_start=warm)
     res.status += f" layers={sizes}"
     return res

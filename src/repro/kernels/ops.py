@@ -24,9 +24,9 @@ def auto_interpret() -> bool:
     return not on_tpu()
 
 
-def pricing_op(A, rho, y, c, state, lo, hi, s, **kw):
+def pricing_op(A, rho, d, state, lo, hi, s, **kw):
     kw.setdefault("interpret", auto_interpret())
-    return pricing(A, rho, y, c, state, lo, hi, s, **kw)
+    return pricing(A, rho, d, state, lo, hi, s, **kw)
 
 
 def bfrt_select_op(ratio, cost, budget, **kw):

@@ -1,17 +1,21 @@
 """Pallas TPU kernel: fused dual-simplex pricing (paper App. C.3, procedure 1).
 
-Per iteration the dual simplex needs, for every column j of A (m x n, m tiny):
+Per iteration the revised dual simplex needs, for every column j of A
+(m x n, m tiny):
     alpha_j = rho . A[:, j]            (pivot row)
-    d_j     = c_j - y . A[:, j]        (reduced cost)
     ratio_j = d_j / (s * alpha_j)  masked by BFRT eligibility
     cost_j  = |alpha_j| * width_j      (bound-flip budget use)
 
-This is ~45% of dual-simplex time in the paper (OpenMP over n); on TPU we
-fuse all four into one pass over A tiled into (m, BLOCK) VMEM blocks — two
-rank-1 MXU matvecs + VPU elementwise, one HBM read of A total.
+The reduced costs d are MAINTAINED by the revised simplex (one O(n) axpy
+``d -= theta * alpha`` per pivot — see ``repro.core.lp``), so unlike the
+textbook loop there is no second matvec ``c - y @ A`` here: this kernel
+performs the single O(mn) sweep of A per simplex iteration — one rank-1
+MXU matvec + VPU elementwise, one HBM read of A total.  This is ~45% of
+dual-simplex time in the paper (OpenMP over n).
 
-Block layout: A tile (m, B) in VMEM; rho/y broadcast as (1, m) operands;
-out tiles (1, B).  n must be padded to a multiple of BLOCK by ops.py.
+Block layout: A tile (m, B) in VMEM; rho broadcast as a (1, m) operand;
+d/state/lo/hi as (1, B) tiles; out tiles (1, B).  n is padded to a
+multiple of BLOCK.
 """
 from __future__ import annotations
 
@@ -24,13 +28,12 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK = 2048
 
 
-def _pricing_kernel(A_ref, rho_ref, y_ref, c_ref, state_ref,
+def _pricing_kernel(A_ref, rho_ref, d_ref, state_ref,
                     lo_ref, hi_ref, s_ref,
                     alpha_ref, ratio_ref, cost_ref, *, tol: float):
     A = A_ref[...]                       # (m, B)
     rho = rho_ref[...]                   # (1, m)
-    y = y_ref[...]                       # (1, m)
-    c = c_ref[...]                       # (1, B)
+    d = d_ref[...]                       # (1, B) maintained reduced costs
     state = state_ref[...]               # (1, B) 0=at_lo, 1=at_up, 2=basic
     lo = lo_ref[...]
     hi = hi_ref[...]
@@ -38,7 +41,6 @@ def _pricing_kernel(A_ref, rho_ref, y_ref, c_ref, state_ref,
 
     acc_t = A.dtype  # f32 accumulation on MXU for <=f32; f64 stays f64
     alpha = jnp.dot(rho, A, preferred_element_type=acc_t)         # (1, B)
-    d = c - jnp.dot(y, A, preferred_element_type=acc_t)
     sa = s * alpha
     nonbasic = state < 2
     at_up = state == 1
@@ -54,12 +56,13 @@ def _pricing_kernel(A_ref, rho_ref, y_ref, c_ref, state_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "tol"))
-def pricing(A, rho, y, c, state, lo, hi, s, *, block: int = DEFAULT_BLOCK,
+def pricing(A, rho, d, state, lo, hi, s, *, block: int = DEFAULT_BLOCK,
             interpret: bool = True, tol: float = 1e-9):
     """Fused pricing over columns.  A: (m, n) f32/f64 -> (alpha, ratio, cost).
 
-    state: int32 (n,) with 0 = nonbasic-at-lower, 1 = nonbasic-at-upper,
-    2 = basic.  s: scalar sign of the primal infeasibility delta.
+    d: (n,) maintained reduced costs.  state: int32 (n,) with
+    0 = nonbasic-at-lower, 1 = nonbasic-at-upper, 2 = basic.
+    s: scalar sign of the primal infeasibility delta.
     """
     m, n = A.shape
     dt = A.dtype
@@ -67,7 +70,7 @@ def pricing(A, rho, y, c, state, lo, hi, s, *, block: int = DEFAULT_BLOCK,
     pad = (-n) % block
     if pad:
         A = jnp.pad(A, ((0, 0), (0, pad)))
-        c = jnp.pad(c, (0, pad))
+        d = jnp.pad(d, (0, pad))
         state = jnp.pad(state, (0, pad), constant_values=2)  # basic = ignore
         lo = jnp.pad(lo, (0, pad))
         hi = jnp.pad(hi, (0, pad))
@@ -80,7 +83,6 @@ def pricing(A, rho, y, c, state, lo, hi, s, *, block: int = DEFAULT_BLOCK,
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, block), lambda i: (0, i)),
-            pl.BlockSpec((1, m), lambda i: (0, 0)),
             pl.BlockSpec((1, m), lambda i: (0, 0)),
             pl.BlockSpec((1, block), lambda i: (0, i)),
             pl.BlockSpec((1, block), lambda i: (0, i)),
@@ -95,7 +97,7 @@ def pricing(A, rho, y, c, state, lo, hi, s, *, block: int = DEFAULT_BLOCK,
         ],
         out_shape=[jax.ShapeDtypeStruct((1, npad), dt)] * 3,
         interpret=interpret,
-    )(A, rho.reshape(1, m), y.reshape(1, m), c.reshape(1, npad),
+    )(A, rho.reshape(1, m), d.reshape(1, npad),
       state.reshape(1, npad).astype(dt), lo.reshape(1, npad),
       hi.reshape(1, npad), jnp.asarray(s, dt).reshape(1, 1))
     return alpha[0, :n], ratio[0, :n], cost[0, :n]

@@ -7,10 +7,9 @@ import jax
 import jax.numpy as jnp
 
 
-def pricing_ref(A, rho, y, c, state, lo, hi, s, tol: float = 1e-9):
-    """Oracle for kernels.pricing.pricing."""
+def pricing_ref(A, rho, d, state, lo, hi, s, tol: float = 1e-9):
+    """Oracle for kernels.pricing.pricing (d = maintained reduced costs)."""
     alpha = rho @ A
-    d = c - y @ A
     sa = s * alpha
     nonbasic = state < 2
     at_up = state == 1

@@ -2,6 +2,8 @@
 comparison (Fig. 7 qualitative), scale factors."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dlv import (dlv, dlv_1d, dlv_1d_partition, get_scale_factors,

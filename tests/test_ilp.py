@@ -1,5 +1,8 @@
 """ILP branch & bound + heuristics vs exhaustive enumeration."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ilp import (ILP_OPTIMAL, brute_force_ilp, solve_ilp,

@@ -17,14 +17,13 @@ from repro.kernels.ref import bfrt_sequential_ref
 def test_pricing_kernel(m, n, block, dtype, rng):
     A = jnp.asarray(rng.normal(size=(m, n)), dtype)
     rho = jnp.asarray(rng.normal(size=m), dtype)
-    y = jnp.asarray(rng.normal(size=m), dtype)
-    c = jnp.asarray(rng.normal(size=n), dtype)
+    d = jnp.asarray(rng.normal(size=n), dtype)
     state = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
     lo = jnp.zeros(n, dtype)
     hi = jnp.asarray(rng.uniform(1, 3, n), dtype)
     for s in (1.0, -1.0):
-        a1, r1, c1 = pricing_op(A, rho, y, c, state, lo, hi, s, block=block)
-        a2, r2, c2 = ref.pricing_ref(A, rho, y, c, state, lo, hi, s)
+        a1, r1, c1 = pricing_op(A, rho, d, state, lo, hi, s, block=block)
+        a2, r2, c2 = ref.pricing_ref(A, rho, d, state, lo, hi, s)
         tol = 1e-5 if dtype == jnp.float32 else 1e-10
         np.testing.assert_allclose(a1, a2, rtol=tol, atol=tol)
         np.testing.assert_allclose(np.where(np.isfinite(r1), r1, -1),

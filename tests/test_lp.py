@@ -2,6 +2,8 @@
 numpy/JAX twin agreement, infeasibility detection."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lp import (INFEASIBLE, OPTIMAL, solve_lp, solve_lp_np,

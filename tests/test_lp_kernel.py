@@ -2,6 +2,8 @@
 bucketed-BFRT tie handling; identical optima certified independently)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lp import OPTIMAL, solve_lp_np, verify_optimality
