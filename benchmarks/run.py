@@ -11,6 +11,13 @@ import os
 import sys
 import time
 
+# Give the CPU host virtual devices BEFORE jax first initializes so the
+# distributed-pricing section of appc_warm_start runs on a real multi-device
+# mesh (no-op when XLA_FLAGS already pins a device count, e.g. on TPU).
+from repro.hostdev import ensure_host_devices
+
+ensure_host_devices()
+
 from benchmarks import (ablations, dual_reducer_bench, grid, infeasibility,
                         partitioning, pds_scaling, ratio_score, roofline,
                         scaling, warm_start)

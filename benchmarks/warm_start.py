@@ -26,7 +26,7 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import build_engine, emit, query_for
+from benchmarks.common import build_engine, emit, query_for, timed
 from repro.core import ilp as ilp_mod
 from repro.core.lp import OPTIMAL, solve_lp_np
 from repro.core.shading import map_warm_basis
@@ -35,23 +35,25 @@ BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_lp.json"
 
 
 class _PairedProbe:
-    """Wraps solve_lp_np: forwards the (possibly warm) solve, and re-runs
+    """Wraps an LP solver (default the numpy twin; pass e.g. the
+    distributed engine): forwards the (possibly warm) solve, and re-runs
     the same LP cold to get the paired cold iteration count."""
 
-    def __init__(self):
+    def __init__(self, solver=None):
+        self.solver = solver or solve_lp_np
         self.warm_iters = 0
         self.cold_iters = 0
         self.n_lps = 0
         self.n_warmed = 0
 
     def __call__(self, c, A, bl, bu, ub, **kw):
-        res = solve_lp_np(c, A, bl, bu, ub, **kw)
+        res = self.solver(c, A, bl, bu, ub, **kw)
         self.n_lps += 1
         self.warm_iters += res.iters
         if kw.get("warm_start") is not None:
             self.n_warmed += 1
             kw_cold = dict(kw, warm_start=None)
-            cold = solve_lp_np(c, A, bl, bu, ub, **kw_cold)
+            cold = self.solver(c, A, bl, bu, ub, **kw_cold)
             self.cold_iters += cold.iters
             if res.status == OPTIMAL and cold.status == OPTIMAL:
                 assert abs(res.obj - cold.obj) <= 1e-6 * (1 + abs(cold.obj))
@@ -110,15 +112,10 @@ def _pipeline(eng, query, probe, *, dr_q: int = 500):
     return marks, obj
 
 
-def _per_iteration_work(record, full: bool) -> None:
-    """Revised engine (incremental Binv/d/xB, refactor every 64) vs the
-    textbook per-iteration recompute (refactor_every=1 rebuilds the
-    inverse, reduced costs and xB from scratch each pivot — the seed
-    engine's work profile) on a large package LP.  Same pivot rules, same
-    optimum; the wall-clock ratio is the per-iteration sweep reduction."""
-    rng = np.random.default_rng(0)
-    n = 1_000_000 if full else 200_000
-    m = 12
+def _big_package_lp(n: int, m: int = 12, seed: int = 0):
+    """Paper-style package LP at scale (shared by the per-iteration and
+    distributed-pricing sections)."""
+    rng = np.random.default_rng(seed)
     c = rng.normal(size=n)
     A = np.stack([np.ones(n)] + [
         rng.normal(rng.uniform(-5, 15), rng.uniform(1, 3), n)
@@ -127,8 +124,17 @@ def _per_iteration_work(record, full: bool) -> None:
     x0[rng.choice(n, 30, replace=False)] = 1.0
     act = A @ x0
     w = np.maximum(np.abs(act) * 0.02, 0.5)
-    bl, bu = act - w, act + w
-    ub = np.ones(n)
+    return c, A, act - w, act + w, np.ones(n)
+
+
+def _per_iteration_work(record, full: bool) -> None:
+    """Revised engine (incremental Binv/d/xB, refactor every 64) vs the
+    textbook per-iteration recompute (refactor_every=1 rebuilds the
+    inverse, reduced costs and xB from scratch each pivot — the seed
+    engine's work profile) on a large package LP.  Same pivot rules, same
+    optimum; the wall-clock ratio is the per-iteration sweep reduction."""
+    n = 1_000_000 if full else 200_000
+    c, A, bl, bu, ub = _big_package_lp(n)
 
     def best_of(k, **kw):
         best, res = np.inf, None
@@ -155,6 +161,75 @@ def _per_iteration_work(record, full: bool) -> None:
         "speedup": round(us_slow / us_fast, 3)}
 
 
+def _distributed_pricing(record, full: bool, eng=None, query=None) -> None:
+    """The distributed pricing backend (core.distributed.solve_lp_dist:
+    sharded A + maintained reduced costs, exact-BFRT shard_map step) on a
+    paper-scale package LP: cold + warm parity vs the numpy twin, with
+    per-iteration engine cost and exact/conservative pivot counts.  Under
+    ``--full`` the warm-threaded Shading cascade is additionally replayed
+    through the distributed engine (B&B node re-solves stay on the numpy
+    twin)."""
+    import jax
+
+    from repro.core.distributed import solve_lp_dist
+
+    p = len(jax.devices())
+    mesh = jax.make_mesh((p, 1), ("data", "model"))
+    n = 1_000_000 if full else 200_000
+    c, A, bl, bu, ub = _big_package_lp(n)
+
+    ref, t_ref = timed(solve_lp_np, c, A, bl, bu, ub, max_iters=20000)
+    t0 = time.time()
+    cold = solve_lp_dist(c, A, bl, bu, ub, mesh=mesh, max_iters=20000)
+    t_cold = time.time() - t0
+    assert cold.status == ref.status == OPTIMAL
+    assert abs(cold.obj - ref.obj) <= 1e-6 * (1 + abs(ref.obj))
+    t0 = time.time()
+    warm = solve_lp_dist(c, A, bl, bu, ub, mesh=mesh, max_iters=20000,
+                         warm_start=ref)
+    t_warm = time.time() - t0
+    assert abs(warm.obj - ref.obj) <= 1e-6 * (1 + abs(ref.obj))
+
+    us_cold = t_cold / max(cold.iters, 1) * 1e6
+    emit("lp_engine_distributed_us_per_iter", us_cold,
+         f"n={n};devices={p};iters={cold.iters};"
+         f"exact={cold.pivot_stats['exact']};"
+         f"conservative={cold.pivot_stats['conservative']};"
+         f"warm_iters={warm.iters}")
+    record["distributed"] = {
+        "n": n, "devices": p,
+        "cold_iters": cold.iters, "warm_iters": warm.iters,
+        "numpy_iters": ref.iters,
+        "us_per_iter": round(us_cold, 1),
+        "numpy_us_per_iter": round(t_ref / max(ref.iters, 1) * 1e6, 1),
+        "pivots_exact": cold.pivot_stats["exact"],
+        "pivots_conservative": cold.pivot_stats["conservative"],
+        "seconds_cold": round(t_cold, 3), "seconds_warm": round(t_warm, 3)}
+
+    if full and eng is not None and query is not None:
+        from functools import partial
+
+        from repro.core.lp import solve_lp
+        probe = _PairedProbe(solver=partial(solve_lp, mesh=mesh))
+        t0 = time.time()
+        marks, obj = _pipeline(eng, query, probe)
+        dt = time.time() - t0
+        # de-cumulate the phase marks (same convention as run()'s records:
+        # 'cascade' is the Shading layers only, 'reducer' the two Dual
+        # Reducer LPs; B&B node re-solves stay on the numpy twin)
+        cw, cc = marks["cascade"]
+        phases = {"cascade": {"warm": cw, "cold": cc}}
+        if "reducer_lps" in marks:
+            rw, rc = marks["reducer_lps"]
+            phases["reducer"] = {"warm": rw - cw, "cold": rc - cc}
+        emit("warm_start_distributed_cascade", dt * 1e6,
+             f"devices={p};cascade_warm={cw};cascade_cold={cc};"
+             f"lps={probe.n_lps};feasible={obj is not None}")
+        record["distributed"]["cascade"] = {
+            "phases": phases, "lps": probe.n_lps, "seconds": round(dt, 3),
+            "feasible": obj is not None}
+
+
 def run(full: bool = False) -> None:
     n = 120_000 if full else 30_000
     eng = build_engine("sdss", n, d_f=8, alpha=600)
@@ -164,6 +239,7 @@ def run(full: bool = False) -> None:
               "queries": []}
     tot_w = tot_c = 0
     orig_ilp_lp = ilp_mod.solve_lp_np
+    query = None
     for h in ([1, 3, 5, 7] if full else [1, 3, 5]):
         query = query_for(eng, "Q1_SDSS", h)
         probe = _PairedProbe()
@@ -197,6 +273,7 @@ def run(full: bool = False) -> None:
     record["total_cold_iters"] = tot_c
     record["iters_speedup"] = round(tot_c / max(tot_w, 1), 3)
     _per_iteration_work(record, full)
+    _distributed_pricing(record, full, eng, query)
     BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
     emit("warm_start_total", 0.0,
          f"cold_iters={tot_c};warm_iters={tot_w};"

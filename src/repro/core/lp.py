@@ -533,9 +533,24 @@ def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
 
 
 def solve_lp(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
-             max_iters: int = 5000, warm_start=None) -> LPResult:
+             max_iters: int = 5000, warm_start=None,
+             mesh=None) -> LPResult:
     """JAX revised dual simplex (jit + while_loop).  Same conventions as
-    solve_lp_np, including the warm-start contract."""
+    solve_lp_np, including the warm-start contract.
+
+    ``mesh=``: a ``jax.sharding.Mesh`` routes the solve through the
+    DISTRIBUTED pricing backend (``repro.core.distributed.solve_lp_dist``):
+    A and the maintained reduced costs stay resident as column-sharded
+    arrays across pivots, pricing is the lone O(mn/p) pass per pivot on
+    each device, and only the O(num_buckets) BFRT histogram (+ the tiny
+    exact in-bucket candidate gather) moves between devices.  ``mesh=None``
+    keeps the single-host jit path.
+    """
+    if mesh is not None:
+        from repro.core.distributed import solve_lp_dist
+        return solve_lp_dist(c, A_t, bl, bu, ub, lb=lb,
+                             max_iters=max_iters, warm_start=warm_start,
+                             mesh=mesh)
     arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start)
     if arrs is None:
         return LPResult(INFEASIBLE, np.zeros(n), 0.0, 0,

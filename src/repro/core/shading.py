@@ -89,7 +89,8 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
             query: PackageQuery, *, max_lp_iters: int = 20000,
             layer_solver: str = "lp", sampler: str = "neighbor",
             rng: Optional[np.random.Generator] = None,
-            warm_start=None, return_state: bool = False):
+            warm_start=None, return_state: bool = False,
+            lp_solver=None):
     """One Shading step (Algorithm 2): layer-l candidates -> layer-(l-1).
 
     Ablation knobs (paper Mini-Experiments 1 and 2):
@@ -100,7 +101,11 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
     warm_start: optional basis for the layer LP (see map_warm_basis);
     return_state: also return the layer LPResult (None for the ilp ablation)
       so progressive_shading can warm-start the next layer.
+    lp_solver: solve_lp_np-compatible callable for the layer LP (default
+      the numpy twin; pass e.g. ``partial(solve_lp, mesh=mesh)`` to run
+      the cascade through the distributed pricing backend).
     """
+    lp_solver = lp_solver or solve_lp_np
     layer_table = hier.layers[l].table
     c, A, bl, bu, ub = query.matrices(layer_table, S_l)
     res: Optional[LPResult] = None
@@ -109,8 +114,8 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
         res_i = solve_ilp(c, A, bl, bu, ub, max_nodes=100, time_limit_s=10)
         s_prime = S_l[res_i.x > 1e-9] if res_i.feasible else np.zeros(0, int)
     else:
-        res = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters,
-                          warm_start=warm_start)
+        res = lp_solver(c, A, bl, bu, ub, max_iters=max_lp_iters,
+                        warm_start=warm_start)
         s_prime = S_l[res.x > 1e-9] if res.status == OPTIMAL \
             else np.zeros(0, np.int64)
     if len(s_prime) == 0:
@@ -160,7 +165,8 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
                         layer_solver: str = "lp",
                         sampler: str = "neighbor",
                         dr_aux: str = "lp",
-                        warm_starts: bool = True
+                        warm_starts: bool = True,
+                        lp_solver=None
                         ) -> PackageResult:
     """Algorithm 1: iterate Shading from layer L to 0, then Dual Reducer.
 
@@ -168,6 +174,9 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
     (``warm_starts=False`` restores the all-cold seed behaviour for
     ablations/benchmarks); the layer-1 basis is likewise re-mapped onto the
     layer-0 candidate set to warm-start Dual Reducer's first LP.
+    ``lp_solver`` routes every layer LP through an alternate
+    solve_lp_np-compatible engine (e.g. the distributed pricing backend,
+    ``functools.partial(solve_lp, mesh=mesh)``).
     """
     t0 = time.time()
     alpha = alpha or hier.alpha
@@ -177,7 +186,8 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
     for l in range(hier.L, 0, -1):
         S_next, lp_res = shading(hier, l, alpha, S, query,
                                  layer_solver=layer_solver, sampler=sampler,
-                                 rng=rng, warm_start=warm, return_state=True)
+                                 rng=rng, warm_start=warm, return_state=True,
+                                 lp_solver=lp_solver)
         warm = map_warm_basis(hier, l, S, lp_res, S_next,
                               obj_attr=query.objective_attr) \
             if warm_starts else None

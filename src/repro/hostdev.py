@@ -1,0 +1,23 @@
+"""Pre-jax host-device bootstrap (stdlib only — safe to import anywhere).
+
+jax locks the device count at first initialization, so multi-device CPU
+runs (the distributed-pricing tests and benchmarks) must append
+``--xla_force_host_platform_device_count`` to XLA_FLAGS BEFORE anything
+imports jax.  Shared by tests/conftest.py and benchmarks/run.py so the
+two always agree on the virtual mesh size.
+"""
+from __future__ import annotations
+
+import os
+
+DEFAULT_HOST_DEVICES = 4
+
+
+def ensure_host_devices(count: int = DEFAULT_HOST_DEVICES) -> None:
+    """Idempotent: no-op when XLA_FLAGS already pins a device count
+    (e.g. on a real TPU host or an explicit override)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={count}"
+        ).strip()

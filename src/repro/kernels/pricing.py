@@ -28,6 +28,26 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK = 2048
 
 
+def pricing_math(alpha, d, state, width, s, tol: float):
+    """BFRT eligibility / ratio / flip-cost from a priced pivot row.
+
+    Shared by the Pallas kernel below and the shard_map distributed step
+    (``repro.core.distributed``) so every backend applies the exact same
+    pivot rules.  ``d`` is the MAINTAINED reduced-cost vector (no
+    ``c - y @ A`` recompute anywhere downstream of this function);
+    ``state`` is 0 = nonbasic-at-lower, 1 = nonbasic-at-upper, 2 = basic.
+    Returns (ratio, cost): ratio is +inf for ineligible columns, cost is 0.
+    """
+    sa = s * alpha
+    nonbasic = state < 2
+    at_up = state == 1
+    elig = nonbasic & (((~at_up) & (sa > tol)) | (at_up & (sa < -tol)))
+    safe = jnp.where(jnp.abs(sa) > tol, sa, 1.0)
+    ratio = jnp.where(elig, jnp.maximum(d / safe, 0.0), jnp.inf)
+    cost = jnp.where(elig, jnp.abs(alpha) * width, 0.0)
+    return ratio, cost
+
+
 def _pricing_kernel(A_ref, rho_ref, d_ref, state_ref,
                     lo_ref, hi_ref, s_ref,
                     alpha_ref, ratio_ref, cost_ref, *, tol: float):
@@ -41,14 +61,7 @@ def _pricing_kernel(A_ref, rho_ref, d_ref, state_ref,
 
     acc_t = A.dtype  # f32 accumulation on MXU for <=f32; f64 stays f64
     alpha = jnp.dot(rho, A, preferred_element_type=acc_t)         # (1, B)
-    sa = s * alpha
-    nonbasic = state < 2
-    at_up = state == 1
-    elig = nonbasic & (((~at_up) & (sa > tol)) | (at_up & (sa < -tol)))
-    safe = jnp.where(jnp.abs(sa) > tol, sa, 1.0)
-    ratio = jnp.where(elig, jnp.maximum(d / safe, 0.0), jnp.inf)
-    width = hi - lo
-    cost = jnp.where(elig, jnp.abs(alpha) * width, 0.0)
+    ratio, cost = pricing_math(alpha, d, state, hi - lo, s, tol)
 
     alpha_ref[...] = alpha
     ratio_ref[...] = ratio

@@ -89,22 +89,25 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 def run_pq_cell(*, multi_pod: bool, n: int = 1 << 24) -> dict:
     """Dry-run the paper's own technique: one distributed dual-simplex
-    iteration (pricing + BFRT histogram + reductions) on the full mesh."""
+    pivot — the pricing + exact-BFRT selection step (consuming MAINTAINED
+    reduced costs, no c - y @ A recompute) and the post-pivot O(n/p)
+    d-update step — on the full mesh."""
     from jax.sharding import NamedSharding
-    from repro.core.distributed import make_pq_step, pq_input_specs
+    from repro.core.distributed import (make_pq_step, make_update_step,
+                                        pq_input_specs)
     import jax.numpy as jnp
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": "pq_step", "shape": f"m8_n{n}", "mesh": mesh_name}
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     m = 8
+    rep = jax.sharding.PartitionSpec()
     with mesh:
         step, col_spec, vec_spec = make_pq_step(mesh, m, n)
         args_abs = pq_input_specs(m, n)
         in_sh = (NamedSharding(mesh, col_spec),) + tuple(
             NamedSharding(mesh, vec_spec) for _ in range(4)) + tuple(
-            NamedSharding(mesh, jax.sharding.PartitionSpec())
-            for _ in range(4))
+            NamedSharding(mesh, rep) for _ in range(3))
         lowered = jax.jit(step, in_shardings=in_sh).lower(*args_abs)
         compiled = lowered.compile()
         hlo = compiled.as_text()
@@ -116,6 +119,21 @@ def run_pq_cell(*, multi_pod: bool, n: int = 1 << 24) -> dict:
                    collectives={k: float(v) for k, v in coll.merged().items()},
                    collective_counts=dict(coll.count_by_kind),
                    dot_flops=st.flops, dot_bytes=st.dot_bytes)
+        # the post-pivot maintenance step must lower with ZERO collectives
+        f = lambda shape, dt=jnp.float64: jax.ShapeDtypeStruct(shape, dt)
+        upd_abs = (f((n,)), jax.ShapeDtypeStruct((n,), jnp.int32),
+                   f((n,)), jax.ShapeDtypeStruct((n,), jnp.bool_),
+                   f(()), jax.ShapeDtypeStruct((), jnp.int64),
+                   jax.ShapeDtypeStruct((), jnp.int64),
+                   jax.ShapeDtypeStruct((), jnp.bool_))
+        upd_sh = tuple(NamedSharding(mesh, vec_spec) for _ in range(4)) + \
+            tuple(NamedSharding(mesh, rep) for _ in range(4))
+        upd = jax.jit(make_update_step(mesh), in_shardings=upd_sh
+                      ).lower(*upd_abs).compile()
+        upd_coll = collective_bytes(upd.as_text())
+        rec.update(update_collectives={k: float(v) for k, v in
+                                       upd_coll.merged().items()},
+                   update_collective_counts=dict(upd_coll.count_by_kind))
     return rec
 
 

@@ -20,6 +20,22 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_abstract_mesh(shape, axes):
+    """Version-compat AbstractMesh: build shardings without real devices.
+
+    Newer jax spells it ``AbstractMesh(axis_sizes, axis_names)``; 0.4.x
+    takes a single tuple of ``(name, size)`` pairs (same pattern as the
+    shard_map shim in ``repro.core.distributed``).
+    """
+    import inspect
+
+    from jax.sharding import AbstractMesh
+    params = inspect.signature(AbstractMesh.__init__).parameters
+    if "axis_names" in params:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    return AbstractMesh(tuple(zip(axes, shape)))
+
+
 # TPU v5e hardware constants used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12       # per chip
 HBM_BW = 819e9                 # bytes/s per chip

@@ -1,3 +1,13 @@
+import os
+import sys
+
+# Give the CPU test host virtual devices BEFORE jax first initializes so
+# the distributed-pricing parity tests can build real 1x2 / 2x2 meshes.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.hostdev import ensure_host_devices  # noqa: E402
+
+ensure_host_devices()
+
 import numpy as np
 import pytest
 

@@ -1,12 +1,15 @@
-"""Distributed pq_step (shard_map dual-simplex iteration) numerical
-equivalence vs the sequential implementation, on a real (tiny) mesh."""
+"""Distributed pricing backend: step-level equivalence vs the sequential
+BFRT reference, full-solve parity vs solve_lp_np (cold and warm) on real
+1x2 / 2x2 host meshes, and the dtype-derived reduction sentinel."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.distributed import make_pq_step
-from repro.core.lp import row_scaling
+from repro.core.distributed import (big_sentinel, make_pq_step,
+                                    solve_lp_dist)
+from repro.core.lp import (OPTIMAL, row_scaling, solve_lp, solve_lp_np,
+                           verify_optimality)
 from repro.kernels.ref import bfrt_sequential_ref
 
 
@@ -24,22 +27,25 @@ def _random_state(seed, m=4, n=4096):
     state = rng.integers(0, 3, n).astype(np.int32)
     rho = rng.normal(size=m)
     y = rng.normal(size=m)
-    return A, c, lo, hi, state, rho, y
+    d = c - y @ A                       # "maintained" reduced costs
+    return A, d, lo, hi, state, rho
 
 
 def test_pq_step_matches_sequential_bfrt(mesh):
+    """The step consumes MAINTAINED reduced costs and — via the exact
+    in-crossing-bucket walk — selects the same entering breakpoint as the
+    sequential BFRT."""
     m, n = 4, 4096
-    A, c, lo, hi, state, rho, y = _random_state(0, m, n)
+    A, d, lo, hi, state, rho = _random_state(0, m, n)
     s, budget = 1.0, 25.0
     step, col_spec, vec_spec = make_pq_step(mesh, m, n, num_buckets=256)
-    with mesh:
-        r_best, q, n_flips, has_cross = step(
-            jnp.asarray(A), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
-            jnp.asarray(state), jnp.asarray(rho), jnp.asarray(y),
-            jnp.asarray(s), jnp.asarray(budget))
-    # sequential reference
+    (alpha_d, flips_d, r_best, q, d_q, at_up_q, Acol, fvec, n_flips,
+     has_cross, exact) = step(
+        jnp.asarray(A), jnp.asarray(d), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(state), jnp.asarray(rho), jnp.asarray(s),
+        jnp.asarray(budget))
+    # sequential reference from the same maintained d (no recompute)
     alpha = rho @ A
-    d = c - y @ A
     sa = s * alpha
     tol = 1e-9
     nonbasic = state < 2
@@ -50,31 +56,33 @@ def test_pq_step_matches_sequential_bfrt(mesh):
     cost = np.where(elig, np.abs(alpha) * (hi - lo), 0.0)
     q_ref, flips_ref, ok_ref = bfrt_sequential_ref(ratio, cost, budget)
     assert bool(has_cross) == ok_ref
+    np.testing.assert_allclose(np.asarray(alpha_d), alpha, atol=1e-10)
     if ok_ref:
-        # pq_step's pass 2 enters at the crossing bucket's minimum — a
-        # *valid, conservative* BFRT step (all strictly-smaller ratios are
-        # flipped; their cumulative cost is below the budget by
-        # construction).  Assert validity + proximity to the exact walk:
-        rb = float(r_best)
-        assert rb <= ratio[q_ref] + 1e-9          # never overshoots
-        flip_cost = cost[np.isfinite(ratio) & (ratio < rb)].sum()
-        assert flip_cost <= budget + 1e-9         # flips stay within budget
-        assert int(n_flips) <= int(flips_ref.sum())
-        # entering variable is eligible
-        q_i = int(q)
-        assert np.isfinite(ratio[q_i])
+        assert bool(exact)
+        assert float(r_best) == pytest.approx(ratio[q_ref])
+        assert float(d_q) == pytest.approx(d[int(q)])
+        assert bool(at_up_q) == bool(state[int(q)] == 1)
+        np.testing.assert_allclose(np.asarray(Acol), A[:, int(q)])
+        # strict-below flips are a subset of the reference flip set and
+        # stay within budget
+        fl = np.asarray(flips_d)
+        assert fl.sum() == int(n_flips)
+        assert cost[fl].sum() <= budget + 1e-9
+        assert np.all(ratio[fl] < float(r_best) + 1e-15)
+        # flip absorption vector matches A @ dx over the flipped columns
+        dx = np.where(at_up, lo - hi, hi - lo) * fl
+        np.testing.assert_allclose(np.asarray(fvec), A @ dx, atol=1e-8)
 
 
 def test_pq_step_infeasible_detection(mesh):
     m, n = 3, 1024
-    A, c, lo, hi, state, rho, y = _random_state(1, m, n)
+    A, d, lo, hi, state, rho = _random_state(1, m, n)
     step, _, _ = make_pq_step(mesh, m, n)
-    with mesh:
-        _, _, _, has_cross = step(
-            jnp.asarray(A), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
-            jnp.asarray(state), jnp.asarray(rho), jnp.asarray(y),
-            jnp.asarray(1.0), jnp.asarray(1e12))   # impossible budget
-    assert not bool(has_cross)
+    out = step(
+        jnp.asarray(A), jnp.asarray(d), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(state), jnp.asarray(rho),
+        jnp.asarray(1.0), jnp.asarray(1e12))   # impossible budget
+    assert not bool(out[-2])                   # has_cross
 
 
 def test_row_scaling_equilibrates():
@@ -82,3 +90,113 @@ def test_row_scaling_equilibrates():
     s = row_scaling(A)
     scaled = A * s[:, None]
     assert np.all(np.abs(scaled).max(axis=1) == pytest.approx(1.0))
+
+
+def test_big_sentinel_is_finite_in_any_x64_mode():
+    """The masked-reduction sentinel must stay finite for every dtype —
+    ``jnp.float64(1e300)`` under default no-x64 truncates to inf and
+    poisons the pmax/pmin reductions."""
+    for dt in (jnp.float32, jnp.float64):
+        v = big_sentinel(dt)
+        assert v.dtype == jnp.dtype(dt)
+        assert bool(jnp.isfinite(v))
+        assert bool(jnp.isfinite(-v))
+    # f32 case is exactly what an unguarded 1e300 would break
+    assert float(big_sentinel(jnp.float32)) < float("inf")
+
+
+# ------------------------------------------------- full-solve parity
+
+
+def _package_lp(seed, m=6, n=800):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n)
+    A = np.stack([np.ones(n)] + [
+        rng.normal(rng.uniform(-2, 5), rng.uniform(0.5, 2), n)
+        for _ in range(m - 1)])
+    x0 = np.zeros(n)
+    x0[rng.choice(n, 16, replace=False)] = 1.0
+    act = A @ x0
+    w = np.maximum(np.abs(act) * 0.05, 0.5)
+    return c, A, act - w, act + w, np.ones(n)
+
+
+def _meshes():
+    shapes = [(1, 2)]
+    if len(jax.devices()) >= 4:
+        shapes.append((2, 2))
+    return shapes
+
+
+@pytest.mark.parametrize("shape", _meshes())
+def test_distributed_solve_matches_numpy_twin(shape):
+    """Cold full solve through the distributed pricing path reaches the
+    numpy twin's objective AND basis, with an independent certificate."""
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    for seed in (0, 3):
+        c, A, bl, bu, ub = _package_lp(seed)
+        ref = solve_lp_np(c, A, bl, bu, ub)
+        res = solve_lp_dist(c, A, bl, bu, ub, mesh=mesh)
+        assert res.status == ref.status == OPTIMAL
+        assert res.obj == pytest.approx(ref.obj, rel=1e-8, abs=1e-8)
+        assert np.array_equal(np.sort(res.basis), np.sort(ref.basis))
+        ok, why = verify_optimality(res, c, A, bl, bu, ub)
+        assert ok, why
+        # exact-BFRT selection: no conservative fallback on these sizes
+        assert res.pivot_stats["conservative"] == 0
+        assert res.pivot_stats["exact"] > 0
+
+
+@pytest.mark.parametrize("shape", _meshes())
+def test_distributed_solve_warm_start_parity(shape):
+    """Warm-started distributed solve: same answer, fewer pivots."""
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    c, A, bl, bu, ub = _package_lp(1)
+    cold = solve_lp_dist(c, A, bl, bu, ub, mesh=mesh)
+    ref = solve_lp_np(c, A, bl, bu, ub)
+    assert cold.status == OPTIMAL
+    # sibling LP provides the warm basis (the Progressive-Shading pattern)
+    c2 = c + 0.01 * np.random.default_rng(42).normal(size=len(c))
+    sib = solve_lp_np(c2, A, bl, bu, ub)
+    warm = solve_lp_dist(c, A, bl, bu, ub, mesh=mesh, warm_start=sib)
+    assert warm.status == OPTIMAL
+    assert warm.obj == pytest.approx(ref.obj, rel=1e-8, abs=1e-8)
+    assert warm.iters <= cold.iters
+    ok, why = verify_optimality(warm, c, A, bl, bu, ub)
+    assert ok, why
+
+
+def test_solve_lp_mesh_kwarg_routes_to_distributed():
+    """core.lp.solve_lp(mesh=...) is the engine's distributed entry."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    c, A, bl, bu, ub = _package_lp(5, n=300)
+    ref = solve_lp_np(c, A, bl, bu, ub)
+    res = solve_lp(c, A, bl, bu, ub, mesh=mesh)
+    assert res.status == ref.status
+    assert res.obj == pytest.approx(ref.obj, rel=1e-8, abs=1e-8)
+    assert hasattr(res, "pivot_stats")
+
+
+def test_distributed_conservative_fallback_still_optimal():
+    """A tiny gather_k forces the truncation fallback; the conservative
+    bucket-minimum pivot is still a valid BFRT step, so the solve reaches
+    the same optimum (possibly in more pivots)."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    c, A, bl, bu, ub = _package_lp(2, n=1500)
+    ref = solve_lp_np(c, A, bl, bu, ub)
+    res = solve_lp_dist(c, A, bl, bu, ub, mesh=mesh, gather_k=2)
+    assert res.status == OPTIMAL
+    assert res.obj == pytest.approx(ref.obj, rel=1e-8, abs=1e-8)
+    assert res.pivot_stats["conservative"] > 0
+    ok, why = verify_optimality(res, c, A, bl, bu, ub)
+    assert ok, why
+
+
+def test_distributed_infeasible_box():
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    c = np.ones(4)
+    A = np.ones((1, 4))
+    ref = solve_lp_np(c, A, np.array([10.0]), np.array([20.0]), np.ones(4))
+    res = solve_lp_dist(c, A, np.array([10.0]), np.array([20.0]),
+                        np.ones(4), mesh=mesh)
+    assert res.status == ref.status

@@ -15,8 +15,8 @@ from repro.models import Model
 @pytest.fixture(scope="module")
 def rules16():
     # AbstractMesh: build shardings without 256 real devices
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     return make_rules(mesh)
 
 
