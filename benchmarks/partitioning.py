@@ -1,24 +1,205 @@
-"""Paper Mini-Experiment 5: DLV vs KD-tree partitioning a large relation
-(time + achievable group counts).  Container scale: 3e5-1e6 tuples
-(paper: 1e8-1e9 on 80 cores; KD-tree OOMs at 1e9)."""
+"""Paper Mini-Experiment 5, driven through the Partitioner subsystem: the
+batched-frontier DLV build (``dlv_rounds``) vs the seed heap build
+(``dlv_heap``) vs KD-tree, at matched group counts.
+
+Records build-time / ratio-score results — including the round-by-round
+build trajectory and the batch-vs-scalar GetGroup probe parity check — to
+``BENCH_partition.json`` at the repo root so later PRs can track the
+trajectory (same pattern as ``BENCH_lp.json``).
+
+CLI (also wired into CI):
+
+    python -m benchmarks.partitioning --smoke    # fast; asserts quality
+    python -m benchmarks.partitioning --full     # 5M-tuple acceptance run
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
 
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core.dlv import dlv
+from repro.core import partitioner
+from repro.core.dlv import dlv_heap, dlv_rounds, ratio_score
+from repro.core.hierarchy import _min_gap
 from repro.core.kdtree import kdtree_partition
 from repro.data.synth_tables import make_table
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_partition.json"
+ATTRS = ("price", "quantity", "discount", "tax")
+
+# quality bar asserted by the CI smoke: WEIGHTED ratio score (within-group
+# variance fraction, in [0,1]) on the max-variance attribute — the one DLV
+# actually splits (beta is keyed by the dominant attribute, so the others
+# legitimately stay near 1.0 and only the dominant score measures quality)
+SMOKE_RATIO_MAX = 0.05
+
+
+def _mean_ratio(X: np.ndarray, gid: np.ndarray) -> float:
+    return float(np.mean([ratio_score(X[:, j], gid, weighted=True)
+                          for j in range(X.shape[1])]))
+
+
+def _dominant_ratio(X: np.ndarray, gid: np.ndarray) -> float:
+    j = int(np.argmax(X.var(axis=0)))
+    return ratio_score(X[:, j], gid, weighted=True)
+
+
+def _probe_parity(res, X: np.ndarray, probes: int, seed: int = 1) -> dict:
+    """Batch GetGroup == scalar descent on random probes, plus timings."""
+    rng = np.random.default_rng(seed)
+    T = X[rng.choice(len(X), size=min(probes, len(X)), replace=False)]
+    t0 = time.time()
+    batch = res.get_group_batch(T)
+    t_batch = time.time() - t0
+    t0 = time.time()
+    scalar = np.fromiter((res.get_group(t) for t in T), np.int64, len(T))
+    t_scalar = time.time() - t0
+    assert np.array_equal(batch, scalar), \
+        "batch get_group diverged from scalar descent"
+    return {"probes": int(len(T)), "match": True,
+            "t_batch_s": t_batch, "t_scalar_s": t_scalar,
+            "speedup": t_scalar / max(t_batch, 1e-9)}
+
+
+def build_entry(n: int, d_f: int, *, heap: bool = True,
+                seed_heap_budget_s: float = 0.0,
+                probes: int = 10_000, seed: int = 0) -> dict:
+    """One benchmark entry: rounds (+trajectory), optional heap baseline
+    (fast shared-scan variant, plus the faithful seed-scan variant under a
+    time budget when ``seed_heap_budget_s`` > 0), KD-tree at matched group
+    count, and the probe parity record."""
+    table = make_table("tpch", n, seed=seed)
+    X = np.stack([table[a] for a in ATTRS], axis=1)
+    entry = {"n": n, "d_f": d_f, "target": n // d_f}
+
+    log: list = []
+    res_r, t_r = timed(dlv_rounds, X, d_f, log=log)
+    entry["rounds"] = {"time_s": t_r, "groups": res_r.num_groups,
+                       "ratio_score": _mean_ratio(X, res_r.gid),
+                       "ratio_score_dominant": _dominant_ratio(X, res_r.gid),
+                       "trajectory": log}
+    emit(f"miniexp5/dlv_rounds/n{n}", t_r * 1e6,
+         f"groups={res_r.num_groups};z={entry['rounds']['ratio_score']:.4f}")
+
+    if heap:
+        res_h, t_h = timed(dlv_heap, X, d_f)
+        entry["heap"] = {"time_s": t_h, "groups": res_h.num_groups,
+                         "ratio_score": _mean_ratio(X, res_h.gid),
+                         "ratio_score_dominant": _dominant_ratio(X, res_h.gid)}
+        entry["speedup_vs_heap"] = t_h / max(t_r, 1e-9)
+        emit(f"miniexp5/dlv_heap/n{n}", t_h * 1e6,
+             f"groups={res_h.num_groups};"
+             f"z={entry['heap']['ratio_score']:.4f};"
+             f"speedup={entry['speedup_vs_heap']:.1f}x")
+
+    if seed_heap_budget_s > 0:
+        # the SEED build: shape-polymorphic jitted scan (one XLA compile
+        # per distinct span length) — run under a budget; a timeout makes
+        # the recorded speedup a lower bound
+        t0 = time.time()
+        try:
+            res_s = dlv_heap(X, d_f, scan="seed",
+                             time_budget_s=seed_heap_budget_s)
+            t_s = time.time() - t0
+            entry["seed_heap"] = {"time_s": t_s,
+                                  "groups": res_s.num_groups,
+                                  "ratio_score": _mean_ratio(X, res_s.gid),
+                                  "timed_out": False}
+        except TimeoutError as e:
+            t_s = time.time() - t0
+            entry["seed_heap"] = {"time_s": t_s, "timed_out": True,
+                                  "detail": str(e)}
+        entry["speedup_vs_seed_heap"] = t_s / max(t_r, 1e-9)
+        entry["speedup_vs_seed_heap_is_lower_bound"] = \
+            entry["seed_heap"]["timed_out"]
+        emit(f"miniexp5/dlv_seed_heap/n{n}", t_s * 1e6,
+             f"timed_out={entry['seed_heap']['timed_out']};"
+             f"speedup={entry['speedup_vs_seed_heap']:.1f}x")
+
+    tau = max(2, n // max(res_r.num_groups, 1))
+    kd, t_kd = timed(kdtree_partition, X, tau=tau)
+    entry["kdtree"] = {"time_s": t_kd, "groups": kd.num_groups,
+                       "ratio_score": _mean_ratio(X, kd.gid)}
+    emit(f"miniexp5/kdtree/n{n}", t_kd * 1e6,
+         f"groups={kd.num_groups};z={entry['kdtree']['ratio_score']:.4f}")
+
+    entry["get_group"] = _probe_parity(res_r, X, probes)
+    emit(f"miniexp5/get_group_batch/n{n}",
+         entry["get_group"]["t_batch_s"] * 1e6,
+         f"probes={entry['get_group']['probes']};"
+         f"speedup={entry['get_group']['speedup']:.1f}x")
+    return entry
+
+
+def bench_min_gap(n: int = 3_000_000, k: int = 4) -> dict:
+    """Satellite: sampled _min_gap estimate vs the exact path."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, k))
+    est, t_sample = timed(_min_gap, X)                      # n > exact limit
+    exact, t_exact = timed(_min_gap, X, exact_limit=n + 1)  # force exact
+    emit(f"miniexp5/min_gap/n{n}", t_sample * 1e6,
+         f"exact_us={t_exact * 1e6:.0f};ratio={est / exact:.2f}")
+    return {"n": n, "t_sample_s": t_sample, "t_exact_s": t_exact,
+            "estimate_over_exact": est / exact}
+
+
+def _save(update: dict) -> None:
+    data = {}
+    if BENCH_PATH.exists():
+        data = json.loads(BENCH_PATH.read_text())
+    entries = data.setdefault("entries", {})
+    for key, val in update.get("entries", {}).items():
+        entries[key] = val
+    for key in ("min_gap",):
+        if key in update:
+            data[key] = update[key]
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"# wrote {BENCH_PATH}")
 
 
 def run(full: bool = False):
     n = 1_000_000 if full else 300_000
-    table = make_table("tpch", n, seed=0)
-    X = np.stack([table[a] for a in
-                  ("price", "quantity", "discount", "tax")], axis=1)
-    res, t_dlv = timed(dlv, X, 100)
-    emit(f"miniexp5/dlv/n{n}", t_dlv * 1e6,
-         f"groups={res.num_groups};target={n // 100}")
-    kd, t_kd = timed(kdtree_partition, X, tau=max(2, n // 1000))
-    emit(f"miniexp5/kdtree/n{n}", t_kd * 1e6,
-         f"groups={kd.num_groups};target=1000")
+    entry = build_entry(n, 100, heap=True)
+    # 3M rows in both profiles: _min_gap's sampled path only engages above
+    # its 2M exact limit
+    update = {"entries": {f"n{n}_df100": entry},
+              "min_gap": bench_min_gap(3_000_000)}
+    if full:
+        # acceptance run: 5M tuples, k=4, d_f=100 (paper-scale container
+        # run); the seed build gets 30 min before the speedup becomes a
+        # lower bound
+        big = build_entry(5_000_000, 100, heap=True,
+                          seed_heap_budget_s=1800.0)
+        update["entries"]["n5000000_df100"] = big
+    _save(update)
+
+
+def smoke():
+    """CI gate: fast build + parity; asserts the JSON lands and the
+    round-based build's quality is under the bar."""
+    entry = build_entry(60_000, 100, heap=False, probes=5_000)
+    _save({"entries": {"smoke_n60000_df100": entry}})
+    assert BENCH_PATH.exists(), "BENCH_partition.json was not written"
+    z = entry["rounds"]["ratio_score_dominant"]
+    assert z < SMOKE_RATIO_MAX, f"ratio score {z} over bar {SMOKE_RATIO_MAX}"
+    assert entry["get_group"]["match"]
+    print(f"# smoke OK: z={z:.4f} groups={entry['rounds']['groups']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,17 +3,18 @@
 For relations that do not fit in memory (the paper's 10^9-tuple regime):
 
   1. one streaming pass estimates per-attribute mean/variance and the range
-     of the highest-variance attribute (Welford over chunks — this is the
-     pass the ``kernels/segstats.py`` Pallas kernel accelerates on TPU);
+     of the highest-variance attribute (Welford over chunks — the pass the
+     ``kernels/segstats.py`` Pallas kernel accelerates on TPU);
   2. the range is split into equal-width buckets, recursively until every
      bucket holds at most ``r`` tuples (r = in-memory budget);
-  3. Algorithm 6 (in-memory DLV) runs per bucket; group ids are offset into
-     a global id space.
+  3. Algorithm 6 (in-memory DLV, batched-frontier rounds) runs per bucket;
+     group ids are offset into a global id space.
 
-Buckets are disjoint half-open intervals on one attribute, so the global
-partition remains a valid DLV-style partition and GetGroup stays sub-linear:
-bucket lookup by ``searchsorted`` on the bucket edges, then the bucket's
-split tree.
+Buckets are disjoint half-open intervals on one attribute, so the merged
+result is one unified :class:`repro.core.partitioner.Partition`: a root
+split node holding the bucket edges whose children are the per-bucket split
+trees — GetGroup (scalar or batch) descends root -> bucket subtree exactly
+like any other backend's tree, and global group ids stay contiguous.
 
 The relation is consumed through the ``ChunkSource`` protocol (anything
 yielding (n_i, k) arrays); ``MemmapSource`` adapts an on-disk .npy memmap —
@@ -22,11 +23,11 @@ the container-scale stand-in for the paper's PostgreSQL heap scans.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Iterator, List, Optional, Sequence
+from typing import Iterator, List, Optional
 
 import numpy as np
 
-from repro.core.dlv import DLVResult, dlv
+from repro.core.partitioner import (Partition, SplitTree, register_backend)
 
 
 class ChunkSource:
@@ -133,31 +134,57 @@ def _bucket_edges(src: ChunkSource, attr: int, lo: float, hi: float,
     return np.asarray(edges)
 
 
-@dataclasses.dataclass
-class BucketedDLV:
-    attr: int
-    edges: np.ndarray                    # bucket boundaries (ascending)
-    parts: List[Optional[DLVResult]]     # per-bucket in-memory DLV
-    group_offset: np.ndarray             # global id base per bucket
-    num_groups: int
-    gid: np.ndarray                      # (n,) global group per input row
-    reps: np.ndarray                     # (G, k)
-    counts: np.ndarray                   # (G,)
-
-    def get_group(self, t: np.ndarray) -> int:
-        b = int(np.clip(np.searchsorted(self.edges, t[self.attr],
-                                        side="right") - 1,
-                        0, len(self.parts) - 1))
-        part = self.parts[b]
+def _merge_bucket_trees(attr: int, edges: np.ndarray,
+                        parts: List[Optional[Partition]],
+                        group_offset: np.ndarray,
+                        num_groups: int) -> SplitTree:
+    """One unified flat tree: a root node on the bucket attribute whose
+    children are the per-bucket subtrees (node ids and leaf gids offset
+    into the global spaces)."""
+    nb = len(parts)
+    attrs = [np.asarray([attr], np.int32)]
+    bound_off_len = [np.asarray([len(edges) - 2], np.int64)]
+    bounds = [np.asarray(edges[1:-1], np.float64)]
+    root_children = np.empty(nb, np.int64)
+    sub_attrs, sub_lens, sub_bounds, sub_children = [], [], [], []
+    node_base = 1
+    for b, part in enumerate(parts):
+        goff = int(group_offset[b])
         if part is None:
-            return int(self.group_offset[b])
-        return int(self.group_offset[b]) + part.get_group(t)
+            # empty bucket: probes fall through to the next group base
+            root_children[b] = ~min(goff, num_groups - 1)
+            continue
+        t = part.tree
+        if t.num_nodes == 0:
+            root_children[b] = ~goff
+            continue
+        root_children[b] = node_base + t.root
+        sub_attrs.append(t.attr)
+        sub_lens.append(np.diff(t.bound_off))
+        sub_bounds.append(t.bounds)
+        ch = t.children.copy()
+        leaf = ch < 0
+        ch[leaf] = ~(~ch[leaf] + goff)
+        ch[~leaf] += node_base
+        sub_children.append(ch)
+        node_base += t.num_nodes
+    attrs = np.concatenate(attrs + sub_attrs).astype(np.int32)
+    lens = np.concatenate(bound_off_len + sub_lens)
+    bound_off = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    all_bounds = np.concatenate(bounds + sub_bounds)
+    children = np.concatenate([root_children] + sub_children) \
+        if sub_children else root_children
+    return SplitTree(attrs, bound_off, all_bounds,
+                     children.astype(np.int64), 0)
 
 
 def dlv_bucketed(src: ChunkSource, d_f: int, *, memory_rows: int,
                  chunk_rows: Optional[int] = None,
-                 rng: Optional[np.random.Generator] = None) -> BucketedDLV:
+                 rng: Optional[np.random.Generator] = None,
+                 method: str = "rounds") -> Partition:
     """Appendix D.2: bucket on the max-variance attribute, DLV per bucket."""
+    from repro.core.dlv import dlv
+
     rng = rng or np.random.default_rng(0)
     chunk_rows = chunk_rows or max(memory_rows // 4, 1024)
     stats = streaming_stats(src, chunk_rows)
@@ -165,12 +192,9 @@ def dlv_bucketed(src: ChunkSource, d_f: int, *, memory_rows: int,
     edges = _bucket_edges(src, attr, stats.lo[attr], stats.hi[attr],
                           memory_rows, chunk_rows)
     nb = len(edges) - 1
+    n = src.num_rows
+    k = src.num_cols
 
-    parts: List[Optional[DLVResult]] = []
-    offsets = np.zeros(nb, np.int64)
-    gid = np.full(src.num_rows, -1, np.int64)
-    reps_all, counts_all = [], []
-    next_gid = 0
     # row positions per bucket (second pass, streamed)
     row_base = 0
     bucket_rows: List[List[np.ndarray]] = [[] for _ in range(nb)]
@@ -183,25 +207,73 @@ def dlv_bucketed(src: ChunkSource, d_f: int, *, memory_rows: int,
                 bucket_rows[b].append(sel + row_base)
         row_base += len(c)
 
+    parts: List[Optional[Partition]] = []
+    group_offset = np.zeros(nb, np.int64)
+    gid = np.full(n, -1, np.int64)
+    order_all, reps_all, lo_all, hi_all = [], [], [], []
+    next_gid = 0
     for b in range(nb):
         rows = (np.concatenate(bucket_rows[b]) if bucket_rows[b]
                 else np.zeros(0, np.int64))
-        offsets[b] = next_gid
+        group_offset[b] = next_gid
         if len(rows) == 0:
             parts.append(None)
             continue
         lo_e, hi_e = edges[b], edges[b + 1]
         Xb = src.gather(lambda ch: (ch[:, attr] >= lo_e)
                         & (ch[:, attr] < hi_e), chunk_rows)
-        assert len(Xb) <= max(memory_rows, 1), (len(Xb), memory_rows)
-        res = dlv(Xb, d_f, rng=rng)
+        # equal-width refinement can fail to isolate point masses /
+        # duplicate-heavy clusters within max_depth; the budget is then
+        # soft — degrade to a larger in-memory bucket instead of dying
+        if len(Xb) > max(memory_rows, 1):
+            import warnings
+            warnings.warn(f"bucket {b} holds {len(Xb)} rows "
+                          f"(> memory_rows={memory_rows}); edge refinement "
+                          "could not isolate a concentration — running "
+                          "in-memory DLV on the oversized bucket")
+        res = dlv(Xb, d_f, rng=rng, method=method)
         parts.append(res)
         gid[rows] = next_gid + res.gid
+        order_all.append(rows[res.order])
         reps_all.append(res.reps)
-        counts_all.append(np.diff(res.offsets))
+        lo_all.append(res.boxes_lo)
+        hi_all.append(res.boxes_hi)
         next_gid += res.num_groups
 
-    reps = np.concatenate(reps_all) if reps_all else np.zeros((0, src.num_cols))
-    counts = np.concatenate(counts_all) if counts_all else np.zeros(0)
-    return BucketedDLV(attr, edges, parts, offsets, next_gid, gid, reps,
-                       counts)
+    # global contiguous layout: buckets in edge order, groups within bucket
+    order = np.concatenate(order_all) if order_all else np.zeros(0, np.int64)
+    off = [0]
+    for part in parts:
+        if part is not None:
+            off.extend((np.asarray(part.offsets[1:]) + off[-1]).tolist())
+    offsets = np.asarray(off, np.int64)
+    reps = np.concatenate(reps_all) if reps_all else np.zeros((0, k))
+    boxes_lo = np.concatenate(lo_all) if lo_all else np.zeros((0, k))
+    boxes_hi = np.concatenate(hi_all) if hi_all else np.zeros((0, k))
+    tree = _merge_bucket_trees(attr, edges, parts, group_offset,
+                               max(next_gid, 1))
+    return Partition(gid, order, offsets, reps, boxes_lo, boxes_hi, tree)
+
+
+@register_backend("bucketing")
+def _bucketing_backend(X, *, d_f: int = 100, memory_rows: int = None,
+                       chunk_rows: Optional[int] = None,
+                       rng: Optional[np.random.Generator] = None,
+                       method: str = "rounds", mesh=None) -> Partition:
+    """Partitioner backend: accepts an array (wrapped in ArraySource) or
+    any ChunkSource.  ``chunk_rows`` sets the streaming chunk size; mesh-
+    sharded per-bucket stats are a ROADMAP item — raise rather than
+    silently ignore."""
+    if mesh is not None:
+        raise TypeError("bucketing backend does not shard per-bucket stats "
+                        "over a mesh yet (see ROADMAP 'Out-of-core layer "
+                        "0'); use backend='dlv' for the mesh path")
+    src = X if isinstance(X, ChunkSource) else ArraySource(np.asarray(X))
+    if memory_rows is None:
+        memory_rows = max(src.num_rows // 8, 4096)
+    return dlv_bucketed(src, d_f, memory_rows=memory_rows,
+                        chunk_rows=chunk_rows, rng=rng, method=method)
+
+
+# Back-compat: the merged result is a plain Partition now.
+BucketedDLV = Partition

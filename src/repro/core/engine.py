@@ -25,11 +25,12 @@ from repro.core.sketchrefine import sketch_refine
 class PackageQueryEngine:
     def __init__(self, table: Dict[str, np.ndarray], attrs: Sequence[str],
                  *, d_f: int = 100, alpha: int = 100_000,
-                 seed: int = 0):
+                 seed: int = 0, partitioner_backend: str = "dlv"):
         self.table = table
         self.attrs = list(attrs)
         self.d_f = d_f
         self.alpha = alpha
+        self.partitioner_backend = partitioner_backend
         self.rng = np.random.default_rng(seed)
         self.hierarchy: Optional[Hierarchy] = None
         self.partition_time_s: float = 0.0
@@ -41,7 +42,8 @@ class PackageQueryEngine:
     def partition(self) -> "PackageQueryEngine":
         t0 = time.time()
         self.hierarchy = Hierarchy(self.table, self.attrs, d_f=self.d_f,
-                                   alpha=self.alpha, rng=self.rng)
+                                   alpha=self.alpha, rng=self.rng,
+                                   backend=self.partitioner_backend)
         self.partition_time_s = time.time() - t0
         return self
 

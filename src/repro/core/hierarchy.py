@@ -1,31 +1,65 @@
 """Hierarchy of relations (paper §2, Fig. 3).
 
 Layer 0 = original tuples; layer l >= 1 = representative tuples (group
-means) from DLV-partitioning layer l-1 with downscale factor d_f, built
-until the top layer has at most ``alpha`` tuples:
-L = ceil(log_{d_f}(n / alpha)).
+means) from partitioning layer l-1 with downscale factor d_f, built until
+the top layer has at most ``alpha`` tuples: L = ceil(log_{d_f}(n / alpha)).
 
-``layers[l].part`` (l >= 1) is the DLVResult that partitioned layer l-1;
-its groups ARE the layer-l tuples, giving:
+``layers[l].part`` (l >= 1) is the :class:`~repro.core.partitioner.Partition`
+that partitioned layer l-1; its groups ARE the layer-l tuples, giving:
     get_tuples(l-1, g) = layers[l].part.members(g)
     get_group(l, t)    = layers[l].part.get_group(t)   (split-tree descent)
+    get_group_batch(l, T)                              (vectorized descent)
+
+The partitioning strategy is selected by name through the Partitioner
+registry (``backend="dlv" | "kdtree" | "bucketing"``).  For huge layer-0
+relations pass ``chunk_rows`` (and optionally a ``mesh``): group stats are
+then accumulated chunk by chunk — sharded across the mesh with psum
+reduction — so the layer-0 sorted copy never materializes host-side.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.dlv import DLVResult, dlv
+from repro.core import partitioner
+from repro.core.partitioner import Partition
+
+_EXACT_GAP_LIMIT = 2_000_000
+_GAP_SAMPLE = 200_000
+
+
+def _min_gap(X: np.ndarray, *, exact_limit: int = _EXACT_GAP_LIMIT,
+             sample: int = _GAP_SAMPLE,
+             rng: Optional[np.random.Generator] = None) -> float:
+    """Smallest positive per-attribute gap (Alg 3, line 1).
+
+    Exact for layers up to ``exact_limit`` rows (one sort per attribute —
+    no ``np.unique`` duplicate pass).  Above that, a sorted random sample
+    estimates the gap: sampling can only OVERestimate the true minimum,
+    which keeps Neighbor Sampling's probes conservative (they step at least
+    one true gap outside the box) instead of the old hard-coded 1e-9.
+    """
+    n = X.shape[0]
+    if n > exact_limit:
+        rng = rng or np.random.default_rng(0)
+        X = X[rng.choice(n, size=sample, replace=False)]
+    best = np.inf
+    for j in range(X.shape[1]):
+        v = np.sort(X[:, j])
+        gaps = np.diff(v)
+        pos = gaps[gaps > 0]
+        if len(pos):
+            best = min(best, float(pos.min()))
+    return best if np.isfinite(best) else 1e-9
 
 
 @dataclasses.dataclass
 class Layer:
     table: Dict[str, np.ndarray]
     X: np.ndarray                    # (n_l, k) attr matrix (column order = attrs)
-    part: Optional[DLVResult]        # partition of layer l-1 (None for layer 0)
+    part: Optional[Partition]        # partition of layer l-1 (None for layer 0)
     eps: float                       # min positive attr gap (Alg 3, line 1)
 
     @property
@@ -33,35 +67,33 @@ class Layer:
         return self.X.shape[0]
 
 
-def _min_gap(X: np.ndarray) -> float:
-    best = np.inf
-    for j in range(X.shape[1]):
-        v = np.unique(X[:, j])
-        if len(v) > 1:
-            gaps = np.diff(v)
-            pos = gaps[gaps > 0]
-            if len(pos):
-                best = min(best, float(pos.min()))
-    return best if np.isfinite(best) else 1e-9
-
-
 class Hierarchy:
     def __init__(self, table: Dict[str, np.ndarray], attrs: Sequence[str],
                  d_f: int = 100, alpha: int = 100_000,
                  rng: Optional[np.random.Generator] = None,
-                 max_layers: int = 12):
+                 max_layers: int = 12, backend: str = "dlv",
+                 backend_kwargs: Optional[dict] = None,
+                 mesh=None, chunk_rows: Optional[int] = None):
         self.attrs = list(attrs)
         self.d_f = d_f
         self.alpha = alpha
+        self.backend = backend
         rng = rng or np.random.default_rng(0)
         X0 = np.stack([np.asarray(table[a], np.float64) for a in self.attrs],
                       axis=1)
         self.layers: List[Layer] = [
             Layer({a: X0[:, i] for i, a in enumerate(self.attrs)}, X0, None,
-                  _min_gap(X0) if X0.shape[0] <= 2_000_000 else 1e-9)]
+                  _min_gap(X0, rng=rng))]
+        kw = dict(backend_kwargs or {})
         while self.layers[-1].size > alpha and len(self.layers) <= max_layers:
             Xl = self.layers[-1].X
-            part = dlv(Xl, d_f, rng=rng)
+            layer_kw = dict(kw)
+            if len(self.layers) == 1 and chunk_rows is not None:
+                # layer 0 is the big one: chunked (optionally mesh-sharded)
+                # group-stats accumulation instead of a full sorted copy
+                layer_kw.update(chunk_rows=chunk_rows, mesh=mesh)
+            part = partitioner.fit(Xl, backend=backend, d_f=d_f, rng=rng,
+                                   **layer_kw)
             if part.num_groups >= Xl.shape[0]:
                 break  # no reduction possible
             reps = part.reps
@@ -76,8 +108,16 @@ class Hierarchy:
         """Member indices (at layer l-1) of group g (a layer-l tuple)."""
         return self.layers[l_minus_1 + 1].part.members(g)
 
+    def get_tuples_batch(self, l_minus_1: int, gs: np.ndarray) -> np.ndarray:
+        """Concatenated member indices of many groups (one gather)."""
+        return self.layers[l_minus_1 + 1].part.members_batch(gs)
+
     def get_group(self, l: int, t: np.ndarray) -> int:
         return self.layers[l].part.get_group(t)
+
+    def get_group_batch(self, l: int, T: np.ndarray, **kw) -> np.ndarray:
+        """Vectorized split-tree descent for a whole batch of tuples."""
+        return self.layers[l].part.get_group_batch(T, **kw)
 
     def group_box(self, l: int, g: int):
         part = self.layers[l].part

@@ -5,6 +5,10 @@ then augments with *neighboring groups* found by constructing 3^k probe
 tuples just outside / inside each group's attribute box and locating their
 groups via the split tree (GetGroup), until the candidate set reaches the
 augmenting size alpha.  This is what recovers the paper's "hidden outliers".
+
+All 3^k probes of a group descend the split tree in ONE vectorized batch
+(``Partition.get_group_batch``); the discovered groups are then admitted
+sequentially so the stop-at-alpha semantics match the scalar loop exactly.
 """
 from __future__ import annotations
 
@@ -29,23 +33,26 @@ def neighbor_sampling(hier: Hierarchy, l: int, alpha: int,
     obj_l = layer.table[obj_attr]
     sgn = -1.0 if maximize else 1.0      # heap pops best objective first
 
-    members = [hier.get_tuples(l - 1, int(g)) for g in s_prime]
+    s_prime = np.asarray(s_prime, np.int64)
+    members: List[np.ndarray] = [part.members_batch(s_prime)] \
+        if len(s_prime) else []
     seen: Set[int] = set(int(g) for g in s_prime)
     count = sum(len(m) for m in members)
     heap: List = [(sgn * float(obj_l[g]), int(g)) for g in seen]
     heapq.heapify(heap)
 
     k = min(layer.X.shape[1], MAX_PROBE_ATTRS)
+    corners = np.array(list(itertools.product(range(3), repeat=k)))  # (3^k, k)
     while heap and count < alpha:
         _, g = heapq.heappop(heap)
         lo, hi = hier.group_box(l, g)
-        choices = [(lo[j] - eps, 0.5 * (lo[j] + hi[j]), hi[j] + eps)
-                   for j in range(k)]
-        probe = np.array([0.5 * (lo[j] + hi[j])
-                          for j in range(layer.X.shape[1])])
-        for combo in itertools.product(*choices):
-            probe[:k] = combo
-            gp = part.get_group(probe)
+        mid = 0.5 * (lo + hi)
+        probes = np.tile(mid, (len(corners), 1))          # (3^k, k_full)
+        choices = np.stack([lo[:k] - eps, mid[:k], hi[:k] + eps])  # (3, k)
+        probes[:, :k] = choices[corners, np.arange(k)]
+        gps = part.get_group_batch(probes)                # ONE batched descent
+        for gp in gps:
+            gp = int(gp)
             if gp not in seen:
                 seen.add(gp)
                 heapq.heappush(heap, (sgn * float(obj_l[gp]), gp))

@@ -127,7 +127,9 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
 
     if sampler == "random":
         rng = rng or np.random.default_rng(0)
-        members = [hier.get_tuples(l - 1, int(g)) for g in s_prime]
+        # one vectorized gather for the support's members (batch GetTuples)
+        members = [hier.get_tuples_batch(l - 1, np.asarray(s_prime,
+                                                           np.int64))]
         seen = set(int(g) for g in s_prime)
         count = sum(len(m) for m in members)
         n_l = hier.layers[l].size

@@ -16,21 +16,27 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import ilp as ilp_mod
+from repro.core import partitioner
 from repro.core.dual_reducer import PackageResult
-from repro.core.kdtree import kdtree_partition
 from repro.core.paql import PackageQuery
 
 
 def sketch_refine(query: PackageQuery, table: Dict[str, np.ndarray],
                   attrs, *, tau_frac: float = 0.001,
-                  ilp_kwargs: Optional[dict] = None) -> PackageResult:
+                  ilp_kwargs: Optional[dict] = None,
+                  backend: str = "kdtree") -> PackageResult:
+    """SketchRefine over any registered partitioner backend (the paper's
+    baseline uses KD-tree; ``backend="dlv"`` gives Stochastic-SketchRefine
+    style cheap re-partitioning on DLV groups)."""
     ilp_kwargs = dict(ilp_kwargs or {})
     X = np.stack([np.asarray(table[a], np.float64) for a in attrs], axis=1)
     n = X.shape[0]
     tau = max(2, int(tau_frac * n))
-    part = kdtree_partition(X, tau=tau)
+    part = partitioner.fit(X, backend=backend,
+                           **({"tau": tau} if backend == "kdtree"
+                              else {"d_f": tau}))
     col = {a: part.reps[:, i] for i, a in enumerate(attrs)}
-    sizes = np.bincount(part.gid, minlength=part.num_groups).astype(np.float64)
+    sizes = part.counts.astype(np.float64)
 
     # ---- sketch: ILP over representatives, multiplicity up to group size
     c, A, bl, bu, _ = query.matrices(col, None)

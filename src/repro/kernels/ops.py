@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.kernels.attention import flash_attention
 from repro.kernels.bfrt import bfrt_histogram, bfrt_select
 from repro.kernels.pricing import pricing
-from repro.kernels.segstats import segment_stats, segstats_partials
+from repro.kernels.segstats import (segment_stats, segment_stats_np,
+                                    segstats_partials)
 
 
 def on_tpu() -> bool:
@@ -39,6 +40,28 @@ def segment_stats_op(vals, ids, num_groups, **kw):
     return segment_stats(vals, ids, num_groups, **kw)
 
 
+def segment_stats_auto(vals, ids, num_groups):
+    """Kernel on TPU, exact bincount twin on hosts (the partitioner path).
+
+    CAVEAT: the TPU kernel accumulates in float32 (MXU one-hot matmuls) —
+    callers must center ``vals`` (DLV passes globally-centered values) and
+    the resulting sum/sumsq only steer split selection, never final reps
+    (``partitioner.group_stats`` recomputes those exactly).  Groups far
+    from the global mean relative to their spread lose variance precision;
+    see ROADMAP "TPU-resident build" for the per-block centering follow-on.
+    """
+    import numpy as np
+
+    if on_tpu():
+        import jax.numpy as jnp
+        cnt, sm, sq = segment_stats(jnp.asarray(vals, jnp.float32),
+                                    jnp.asarray(ids, jnp.int32),
+                                    num_groups, interpret=False)
+        return (np.asarray(cnt, np.float64), np.asarray(sm, np.float64),
+                np.asarray(sq, np.float64))
+    return segment_stats_np(vals, ids, num_groups)
+
+
 def flash_attention_op(q, k, v, *, num_kv_heads=None, **kw):
     """q: (B, S, H, d); k/v: (B, S, KV, d).  GQA expansion then kernel."""
     kw.setdefault("interpret", auto_interpret())
@@ -56,5 +79,6 @@ def flash_attention_op(q, k, v, *, num_kv_heads=None, **kw):
 
 
 __all__ = ["pricing_op", "bfrt_select_op", "segment_stats_op",
-           "flash_attention_op", "bfrt_histogram", "segstats_partials",
-           "on_tpu", "auto_interpret"]
+           "segment_stats_auto", "segment_stats_np", "flash_attention_op",
+           "bfrt_histogram", "segstats_partials", "on_tpu",
+           "auto_interpret"]

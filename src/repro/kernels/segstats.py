@@ -83,6 +83,43 @@ def segstats_partials(vals, ids, *, block: int = DEFAULT_BLOCK,
             sq.reshape(nb, block, k))
 
 
+def segment_stats_np(vals, ids, num_groups: int):
+    """The kernel's host twin: per-group (count, sum, sumsq) via bincount.
+
+    Exact float64 accumulation — the partitioner's default on hosts
+    without a TPU, where interpreting the Pallas kernel would serialize
+    the hot loop.  Same contract as :func:`segment_stats`.
+    """
+    import numpy as np
+
+    vals = np.asarray(vals, np.float64)
+    ids = np.asarray(ids)
+    n, k = vals.shape
+    if n and np.all(ids[1:] >= ids[:-1]):
+        # sorted ids (the post-DLV layout): contiguous reduceat beats the
+        # bincount scatter
+        bpos = np.concatenate([[0], np.flatnonzero(np.diff(ids)) + 1])
+        present = ids[bpos]
+        cnt = np.zeros(num_groups)
+        cnt[present] = np.diff(np.concatenate([bpos, [n]]))
+        sums = np.zeros((num_groups, k))
+        sqs = np.zeros((num_groups, k))
+        for j in range(k):
+            w = np.ascontiguousarray(vals[:, j])
+            sums[present, j] = np.add.reduceat(w, bpos)
+            sqs[present, j] = np.add.reduceat(w * w, bpos)
+        return cnt, sums, sqs
+    cnt = np.bincount(ids, minlength=num_groups).astype(np.float64)
+    sums = np.empty((num_groups, k))
+    sqs = np.empty((num_groups, k))
+    for j in range(k):
+        sums[:, j] = np.bincount(ids, weights=vals[:, j],
+                                 minlength=num_groups)
+        sqs[:, j] = np.bincount(ids, weights=vals[:, j] ** 2,
+                                minlength=num_groups)
+    return cnt, sums, sqs
+
+
 def segment_stats(vals, ids, num_groups: int, *, block: int = DEFAULT_BLOCK,
                   interpret: bool = True):
     """Full segment stats: (counts (G,), sums (G, k), sumsqs (G, k))."""
