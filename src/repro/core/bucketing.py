@@ -3,12 +3,23 @@
 For relations that do not fit in memory (the paper's 10^9-tuple regime):
 
   1. one streaming pass estimates per-attribute mean/variance and the range
-     of the highest-variance attribute (Welford over chunks — the pass the
-     ``kernels/segstats.py`` Pallas kernel accelerates on TPU);
+     of the highest-variance attribute (Welford over chunks; with a
+     ``mesh`` each chunk's moments are computed sharded over the mesh's
+     leading axis with psum reduction — the same pattern
+     ``partitioner.group_stats`` uses for group stats);
   2. the range is split into equal-width buckets, recursively until every
-     bucket holds at most ``r`` tuples (r = in-memory budget);
-  3. Algorithm 6 (in-memory DLV, batched-frontier rounds) runs per bucket;
-     group ids are offset into a global id space.
+     bucket holds at most ``r`` tuples (r = in-memory budget) — each
+     refinement is one counting pass, the refinement depth is bounded, and
+     degenerate ranges (constant attribute, point masses) collapse to the
+     oversized-bucket warning path instead of emitting phantom buckets;
+  3. ONE further streaming pass spills every row into its bucket's scratch
+     slice — a bucket-major (n, k) scratch plus an (n,) global-row-id
+     array, memmap-backed above ``spill_rows`` — so the total build I/O is
+     O(1) full passes *independent of the bucket count* (the seed did one
+     full rescan per bucket = O(n_buckets * n) reads);
+  4. Algorithm 6 (in-memory DLV, batched-frontier rounds) runs per bucket
+     on its contiguous scratch slice; group ids are offset into a global
+     id space.
 
 Buckets are disjoint half-open intervals on one attribute, so the merged
 result is one unified :class:`repro.core.partitioner.Partition`: a root
@@ -17,13 +28,18 @@ trees — GetGroup (scalar or batch) descends root -> bucket subtree exactly
 like any other backend's tree, and global group ids stay contiguous.
 
 The relation is consumed through the ``ChunkSource`` protocol (anything
-yielding (n_i, k) arrays); ``MemmapSource`` adapts an on-disk .npy memmap —
-the container-scale stand-in for the paper's PostgreSQL heap scans.
+yielding (n_i, k) arrays); ``MemmapSource`` adapts an on-disk .npy memmap
+(or, via :meth:`MemmapSource.from_raw`, a headerless binary file) — the
+container-scale stand-in for the paper's PostgreSQL heap scans.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+import os
+import shutil
+import tempfile
+import warnings
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -45,7 +61,7 @@ class ChunkSource:
         raise NotImplementedError
 
     def gather(self, mask_fn, chunk_rows: int) -> np.ndarray:
-        """Materialise the rows where mask_fn(chunk) is True (bucket load)."""
+        """Materialise the rows where mask_fn(chunk) is True (one pass)."""
         parts = [c[mask_fn(c)] for c in self.chunks(chunk_rows)]
         return np.concatenate(parts, axis=0) if parts else \
             np.zeros((0, self.num_cols))
@@ -71,9 +87,23 @@ class ArraySource(ChunkSource):
 class MemmapSource(ArraySource):
     """On-disk relation (np.memmap) — rows stream through a fixed budget."""
 
-    def __init__(self, path: str, shape, dtype=np.float64):
+    def __init__(self, path: str, shape=None, dtype=None):
         self.X = np.lib.format.open_memmap(path, mode="r")
-        assert self.X.shape == tuple(shape), (self.X.shape, shape)
+        if shape is not None and self.X.shape != tuple(shape):
+            raise ValueError(f"{path}: stored shape {self.X.shape} != "
+                             f"expected {tuple(shape)}")
+        if dtype is not None and self.X.dtype != np.dtype(dtype):
+            raise ValueError(f"{path}: stored dtype {self.X.dtype} != "
+                             f"expected {np.dtype(dtype)}")
+
+    @classmethod
+    def from_raw(cls, path: str, shape, dtype=np.float64,
+                 offset: int = 0) -> "MemmapSource":
+        """Headerless row-major binary file (no .npy header)."""
+        src = cls.__new__(cls)
+        src.X = np.memmap(path, dtype=np.dtype(dtype), mode="r",
+                          offset=offset, shape=tuple(shape))
+        return src
 
 
 @dataclasses.dataclass
@@ -85,53 +115,268 @@ class StreamStats:
     hi: np.ndarray
 
 
-def streaming_stats(src: ChunkSource, chunk_rows: int) -> StreamStats:
-    """One pass: per-attribute mean/var (Chan's parallel Welford) + range."""
+# ----------------------------------------------------- mesh-sharded passes
+
+
+def _mesh_pad(mesh, chunk: np.ndarray) -> np.ndarray:
+    """Pad a chunk with NaN rows to a multiple of the mesh's leading axis
+    (NaN rows are masked out inside the sharded reductions)."""
+    nd = int(mesh.shape[mesh.axis_names[0]])
+    rows = ((len(chunk) + nd - 1) // nd) * nd
+    if rows == len(chunk):
+        return chunk
+    return np.pad(chunk, ((0, rows - len(chunk)), (0, 0)),
+                  constant_values=np.nan)
+
+
+def _mesh_moments_jit(mesh, k: int):
+    """Sharded per-chunk (count, shifted sum, shifted sumsq, min, max):
+    rows split over the mesh's leading axis, per-device partials
+    psum-reduced — the streaming-stats twin of
+    ``partitioner._chunk_stats_jit``.  ``shift`` (a per-column anchor, the
+    relation's first row) centers the accumulators so the raw-moment
+    variance ``q - n*mb^2`` never cancels catastrophically on
+    large-mean/small-spread data (the PR 3 ``gshift`` trick)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import shard_map
+
+    axis = mesh.axis_names[0]
+
+    def local(v, shift):
+        bad = jnp.isnan(v)
+        cnt = jnp.sum(~bad[:, 0])
+        vz = jnp.where(bad, 0.0, v - shift[None, :])
+        s = vz.sum(axis=0)
+        q = (vz * vz).sum(axis=0)
+        mn = jnp.where(bad, jnp.inf, v).min(axis=0)
+        mx = jnp.where(bad, -jnp.inf, v).max(axis=0)
+        return (jax.lax.psum(cnt, axis), jax.lax.psum(s, axis),
+                jax.lax.psum(q, axis), jax.lax.pmin(mn, axis),
+                jax.lax.pmax(mx, axis))
+
+    fn = jax.jit(shard_map(local, mesh=mesh,
+                           in_specs=(P(axis, None), P(None)),
+                           out_specs=(P(), P(None), P(None), P(None),
+                                      P(None))))
+    vsh = NamedSharding(mesh, P(axis, None))
+
+    def run(chunk: np.ndarray, shift: np.ndarray):
+        import jax as _jax
+        cp = _mesh_pad(mesh, chunk)
+        cnt, s, q, mn, mx = fn(_jax.device_put(jnp.asarray(cp), vsh),
+                               jnp.asarray(shift))
+        return (int(cnt), np.asarray(s), np.asarray(q), np.asarray(mn),
+                np.asarray(mx))
+
+    return run
+
+
+def _mesh_bincount_jit(mesh, nbins: int):
+    """Sharded per-chunk bucket histogram for one attribute column against
+    fixed edges (NaN pad rows fall in the dead padding bin)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import shard_map
+
+    axis = mesh.axis_names[0]
+
+    def local(v, edges):
+        bad = jnp.isnan(v)
+        ids = jnp.clip(jnp.searchsorted(edges, jnp.where(bad, edges[0], v),
+                                        side="right") - 1, 0, nbins - 1)
+        cnt = jnp.zeros(nbins, jnp.int64).at[ids].add(
+            jnp.where(bad, 0, 1).astype(jnp.int64))
+        return jax.lax.psum(cnt, axis)
+
+    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(axis), P(None)),
+                           out_specs=P(None)))
+    vsh = NamedSharding(mesh, P(axis))
+
+    def run(col: np.ndarray, edges: np.ndarray):
+        import jax as _jax
+        nd = int(mesh.shape[mesh.axis_names[0]])
+        rows = ((len(col) + nd - 1) // nd) * nd
+        cp = np.pad(col, (0, rows - len(col)), constant_values=np.nan)
+        return np.asarray(fn(_jax.device_put(jnp.asarray(cp), vsh),
+                             jnp.asarray(edges)))
+
+    return run
+
+
+def streaming_stats(src: ChunkSource, chunk_rows: int,
+                    mesh=None) -> StreamStats:
+    """One pass: per-attribute mean/var (Chan's parallel Welford) + range.
+
+    With ``mesh``, each chunk's (count, sum, sumsq, min, max) runs sharded
+    over the mesh's leading axis (shard_map + psum); the cross-chunk Chan
+    merge stays host-side on (k,) accumulators.
+    """
     count = 0
     mean = np.zeros(src.num_cols)
     m2 = np.zeros(src.num_cols)
     lo = np.full(src.num_cols, np.inf)
     hi = np.full(src.num_cols, -np.inf)
+    moments = _mesh_moments_jit(mesh, src.num_cols) if mesh is not None \
+        else None
+    shift = None
     for c in src.chunks(chunk_rows):
         nb = len(c)
         if nb == 0:
             continue
-        mb = c.mean(axis=0)
-        m2b = ((c - mb) ** 2).sum(axis=0)
+        if moments is not None:
+            if shift is None:
+                shift = np.asarray(c[0], np.float64)  # per-column anchor
+            nb, s, q, cl, ch = moments(c, shift)
+            mbs = s / nb                       # mean of (v - shift)
+            m2b = np.maximum(q - nb * mbs * mbs, 0.0)
+            mb = shift + mbs
+        else:
+            mb = c.mean(axis=0)
+            m2b = ((c - mb) ** 2).sum(axis=0)
+            cl = c.min(axis=0)
+            ch = c.max(axis=0)
         delta = mb - mean
         tot = count + nb
         mean = mean + delta * (nb / tot)
         m2 = m2 + m2b + delta ** 2 * (count * nb / tot)
         count = tot
-        lo = np.minimum(lo, c.min(axis=0))
-        hi = np.maximum(hi, c.max(axis=0))
-    var = m2 / max(count, 1)
+        lo = np.minimum(lo, cl)
+        hi = np.maximum(hi, ch)
+    var = np.maximum(m2, 0.0) / max(count, 1)
     return StreamStats(count, mean, var, lo, hi)
 
 
-def _bucket_edges(src: ChunkSource, attr: int, lo: float, hi: float,
-                  r: int, chunk_rows: int, max_depth: int = 8) -> np.ndarray:
-    """Equal-width edges refined until every bucket holds <= r rows."""
-    edges = [lo, np.nextafter(hi, np.inf)]
-    for _ in range(max_depth):
-        e = np.asarray(edges)
-        counts = np.zeros(len(e) - 1, np.int64)
-        for c in src.chunks(chunk_rows):
+# -------------------------------------------------------------- bucket edges
+
+
+def _count_buckets(src: ChunkSource, attr: int, e: np.ndarray,
+                   chunk_rows: int, mesh=None) -> np.ndarray:
+    counts = np.zeros(len(e) - 1, np.int64)
+    counter = _mesh_bincount_jit(mesh, len(counts)) if mesh is not None \
+        else None
+    for c in src.chunks(chunk_rows):
+        if not len(c):
+            continue
+        if counter is not None:
+            counts += counter(np.asarray(c[:, attr], np.float64), e)
+        else:
             idx = np.clip(np.searchsorted(e, c[:, attr], side="right") - 1,
                           0, len(counts) - 1)
             counts += np.bincount(idx, minlength=len(counts))
+    return counts
+
+
+def _bucket_edges(src: ChunkSource, attr: int, lo: float, hi: float,
+                  r: int, chunk_rows: int, max_depth: int = 8,
+                  mesh=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Equal-width edges refined until every bucket holds <= r rows.
+
+    Returns ``(edges, counts)`` with counts exact for the returned edges.
+    Degenerate ranges are guarded: a constant attribute (lo == hi) yields
+    one bucket, and refinement of a point mass (``np.linspace`` emitting
+    duplicate / zero-width edges) is deduped — when an overfull bucket can
+    no longer be narrowed the loop stops and the caller's oversized-bucket
+    warning path degrades gracefully instead of producing empty phantom
+    buckets.
+    """
+    if not (np.isfinite(lo) and np.isfinite(hi)) or hi <= lo:
+        # constant (or empty/degenerate) attribute: a single bucket
+        edges = np.asarray([lo, np.nextafter(max(lo, hi), np.inf)])
+        counts = np.asarray([src.num_rows], np.int64)
+        return edges, counts
+    edges = np.asarray([lo, np.nextafter(hi, np.inf)])
+    counts = None
+    for _ in range(max_depth):
+        counts = _count_buckets(src, attr, edges, chunk_rows, mesh=mesh)
         if counts.max() <= r:
-            return e
-        new_edges = [e[0]]
+            return edges, counts
+        new_edges = [edges[0]]
         for i, n in enumerate(counts):
             if n > r:
                 splits = int(np.ceil(n / r))
-                new_edges.extend(np.linspace(e[i], e[i + 1],
+                new_edges.extend(np.linspace(edges[i], edges[i + 1],
                                              splits + 1)[1:].tolist())
             else:
-                new_edges.append(e[i + 1])
-        edges = new_edges
-    return np.asarray(edges)
+                new_edges.append(edges[i + 1])
+        refined = np.unique(np.asarray(new_edges))   # dedupe zero-width
+        if len(refined) == len(edges):
+            break        # point mass: no new edge survived — stop refining
+        edges = refined
+        counts = None
+    if counts is None:
+        counts = _count_buckets(src, attr, edges, chunk_rows, mesh=mesh)
+    return edges, counts
+
+
+# -------------------------------------------------------------- spill pass
+
+
+class BucketSpill:
+    """Bucket-major scratch for the single spill pass.
+
+    Values land in one (n, k) scratch matrix laid out bucket-by-bucket
+    (bucket b owns ``[off[b], off[b+1])``) with the matching (n,) global
+    row ids; both become ``.npy`` memmaps in a private temp dir when the
+    relation exceeds ``budget_rows`` — per-bucket loads then read one
+    contiguous slice each, so the whole build does O(1) streaming passes.
+    """
+
+    def __init__(self, counts: np.ndarray, k: int, budget_rows: int,
+                 spill_dir: Optional[str] = None):
+        self.off = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        n = int(self.off[-1])
+        self._cursor = self.off[:-1].copy()
+        self._tmp = None
+        if n > budget_rows:
+            self._tmp = tempfile.mkdtemp(prefix="pq_spill_",
+                                         dir=spill_dir)
+            self.vals = np.lib.format.open_memmap(
+                os.path.join(self._tmp, "vals.npy"), mode="w+",
+                dtype=np.float64, shape=(n, k))
+            self.rows = np.lib.format.open_memmap(
+                os.path.join(self._tmp, "rows.npy"), mode="w+",
+                dtype=np.int64, shape=(n,))
+        else:
+            self.vals = np.empty((n, k), np.float64)
+            self.rows = np.empty(n, np.int64)
+
+    @property
+    def spilled(self) -> bool:
+        return self._tmp is not None
+
+    def add(self, chunk: np.ndarray, bidx: np.ndarray,
+            row_base: int) -> None:
+        """Append this chunk's rows to their buckets (contiguous writes)."""
+        order = np.argsort(bidx, kind="stable")
+        ccnt = np.bincount(bidx, minlength=len(self._cursor))
+        present = np.flatnonzero(ccnt)
+        starts = np.concatenate([[0], np.cumsum(ccnt[present])])
+        for t, b in enumerate(present):
+            sel = order[starts[t]:starts[t + 1]]
+            c0 = self._cursor[b]
+            c1 = c0 + len(sel)
+            self.vals[c0:c1] = chunk[sel]
+            self.rows[c0:c1] = row_base + sel
+            self._cursor[b] = c1
+
+    def bucket(self, b: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Bucket b's (values, global row ids) — one resident copy."""
+        s, e = self.off[b], self.off[b + 1]
+        return np.array(self.vals[s:e]), np.array(self.rows[s:e])
+
+    def close(self) -> None:
+        del self.vals, self.rows
+        if self._tmp is not None:
+            shutil.rmtree(self._tmp, ignore_errors=True)
+            self._tmp = None
+
+
+# ------------------------------------------------------------- merged tree
 
 
 def _merge_bucket_trees(attr: int, edges: np.ndarray,
@@ -178,67 +423,91 @@ def _merge_bucket_trees(attr: int, edges: np.ndarray,
                      children.astype(np.int64), 0)
 
 
+# ------------------------------------------------------------- main build
+
+
+_SPILL_MEM_ROWS = 1 << 22    # in-RAM scratch ceiling when spill_rows unset
+
+
 def dlv_bucketed(src: ChunkSource, d_f: int, *, memory_rows: int,
                  chunk_rows: Optional[int] = None,
                  rng: Optional[np.random.Generator] = None,
-                 method: str = "rounds") -> Partition:
-    """Appendix D.2: bucket on the max-variance attribute, DLV per bucket."""
+                 method: str = "rounds", mesh=None,
+                 spill_rows: Optional[int] = None,
+                 spill_dir: Optional[str] = None) -> Partition:
+    """Appendix D.2: bucket on the max-variance attribute, DLV per bucket.
+
+    The relation is read in O(1) full streaming passes regardless of the
+    bucket count: one stats pass, <= max_depth counting passes for the
+    edges, and ONE spill pass that lands every row in its bucket's scratch
+    slice (see :class:`BucketSpill`); per-bucket DLV then consumes each
+    contiguous slice.  ``spill_rows`` bounds the in-RAM scratch (above it
+    the scratch is memmap-backed; default ``max(memory_rows, 4M)`` rows);
+    ``mesh`` runs the per-chunk stats/histogram passes sharded (psum).
+    """
     from repro.core.dlv import dlv
 
     rng = rng or np.random.default_rng(0)
     chunk_rows = chunk_rows or max(memory_rows // 4, 1024)
-    stats = streaming_stats(src, chunk_rows)
+    stats = streaming_stats(src, chunk_rows, mesh=mesh)
     attr = int(np.argmax(stats.var))
-    edges = _bucket_edges(src, attr, stats.lo[attr], stats.hi[attr],
-                          memory_rows, chunk_rows)
+    edges, counts = _bucket_edges(src, attr, stats.lo[attr], stats.hi[attr],
+                                  memory_rows, chunk_rows, mesh=mesh)
     nb = len(edges) - 1
     n = src.num_rows
     k = src.num_cols
+    if spill_rows is None:
+        spill_rows = max(memory_rows, _SPILL_MEM_ROWS)
 
-    # row positions per bucket (second pass, streamed)
+    # ---- the ONE spill pass: every row to its bucket's scratch slice
+    spill = BucketSpill(counts, k, spill_rows, spill_dir)
     row_base = 0
-    bucket_rows: List[List[np.ndarray]] = [[] for _ in range(nb)]
     for c in src.chunks(chunk_rows):
-        idx = np.clip(np.searchsorted(edges, c[:, attr], side="right") - 1,
-                      0, nb - 1)
-        for b in range(nb):
-            sel = np.flatnonzero(idx == b)
-            if len(sel):
-                bucket_rows[b].append(sel + row_base)
-        row_base += len(c)
-
-    parts: List[Optional[Partition]] = []
-    group_offset = np.zeros(nb, np.int64)
-    gid = np.full(n, -1, np.int64)
-    order_all, reps_all, lo_all, hi_all = [], [], [], []
-    next_gid = 0
-    for b in range(nb):
-        rows = (np.concatenate(bucket_rows[b]) if bucket_rows[b]
-                else np.zeros(0, np.int64))
-        group_offset[b] = next_gid
-        if len(rows) == 0:
-            parts.append(None)
+        if not len(c):
             continue
-        lo_e, hi_e = edges[b], edges[b + 1]
-        Xb = src.gather(lambda ch: (ch[:, attr] >= lo_e)
-                        & (ch[:, attr] < hi_e), chunk_rows)
-        # equal-width refinement can fail to isolate point masses /
-        # duplicate-heavy clusters within max_depth; the budget is then
-        # soft — degrade to a larger in-memory bucket instead of dying
-        if len(Xb) > max(memory_rows, 1):
-            import warnings
-            warnings.warn(f"bucket {b} holds {len(Xb)} rows "
-                          f"(> memory_rows={memory_rows}); edge refinement "
-                          "could not isolate a concentration — running "
-                          "in-memory DLV on the oversized bucket")
-        res = dlv(Xb, d_f, rng=rng, method=method)
-        parts.append(res)
-        gid[rows] = next_gid + res.gid
-        order_all.append(rows[res.order])
-        reps_all.append(res.reps)
-        lo_all.append(res.boxes_lo)
-        hi_all.append(res.boxes_hi)
-        next_gid += res.num_groups
+        bidx = np.clip(np.searchsorted(edges, c[:, attr], side="right") - 1,
+                       0, nb - 1)
+        spill.add(np.asarray(c, np.float64), bidx, row_base)
+        row_base += len(c)
+    if row_base != int(spill.off[-1]):
+        spill.close()
+        raise RuntimeError(f"spill pass saw {row_base} rows but bucket "
+                           f"counts sum to {int(spill.off[-1])} — source "
+                           "changed between passes?")
+
+    try:
+        parts: List[Optional[Partition]] = []
+        group_offset = np.zeros(nb, np.int64)
+        gid = np.full(n, -1, np.int64)
+        order_all, reps_all, lo_all, hi_all = [], [], [], []
+        next_gid = 0
+        for b in range(nb):
+            group_offset[b] = next_gid
+            if counts[b] == 0:
+                parts.append(None)
+                continue
+            Xb, rows = spill.bucket(b)
+            from repro.core import relation as relation_mod
+            relation_mod.note_resident(len(Xb))
+            # equal-width refinement can fail to isolate point masses /
+            # duplicate-heavy clusters within max_depth; the budget is then
+            # soft — degrade to a larger in-memory bucket instead of dying
+            if len(Xb) > max(memory_rows, 1):
+                warnings.warn(f"bucket {b} holds {len(Xb)} rows "
+                              f"(> memory_rows={memory_rows}); edge "
+                              "refinement could not isolate a "
+                              "concentration — running in-memory DLV on "
+                              "the oversized bucket")
+            res = dlv(Xb, d_f, rng=rng, method=method)
+            parts.append(res)
+            gid[rows] = next_gid + res.gid
+            order_all.append(rows[res.order])
+            reps_all.append(res.reps)
+            lo_all.append(res.boxes_lo)
+            hi_all.append(res.boxes_hi)
+            next_gid += res.num_groups
+    finally:
+        spill.close()
 
     # global contiguous layout: buckets in edge order, groups within bucket
     order = np.concatenate(order_all) if order_all else np.zeros(0, np.int64)
@@ -259,20 +528,19 @@ def dlv_bucketed(src: ChunkSource, d_f: int, *, memory_rows: int,
 def _bucketing_backend(X, *, d_f: int = 100, memory_rows: int = None,
                        chunk_rows: Optional[int] = None,
                        rng: Optional[np.random.Generator] = None,
-                       method: str = "rounds", mesh=None) -> Partition:
+                       method: str = "rounds", mesh=None,
+                       spill_rows: Optional[int] = None,
+                       spill_dir: Optional[str] = None) -> Partition:
     """Partitioner backend: accepts an array (wrapped in ArraySource) or
-    any ChunkSource.  ``chunk_rows`` sets the streaming chunk size; mesh-
-    sharded per-bucket stats are a ROADMAP item — raise rather than
-    silently ignore."""
-    if mesh is not None:
-        raise TypeError("bucketing backend does not shard per-bucket stats "
-                        "over a mesh yet (see ROADMAP 'Out-of-core layer "
-                        "0'); use backend='dlv' for the mesh path")
+    any ChunkSource.  ``chunk_rows`` sets the streaming chunk size;
+    ``mesh`` shards the per-chunk stats / histogram passes (psum)."""
     src = X if isinstance(X, ChunkSource) else ArraySource(np.asarray(X))
     if memory_rows is None:
         memory_rows = max(src.num_rows // 8, 4096)
     return dlv_bucketed(src, d_f, memory_rows=memory_rows,
-                        chunk_rows=chunk_rows, rng=rng, method=method)
+                        chunk_rows=chunk_rows, rng=rng, method=method,
+                        mesh=mesh, spill_rows=spill_rows,
+                        spill_dir=spill_dir)
 
 
 # Back-compat: the merged result is a plain Partition now.

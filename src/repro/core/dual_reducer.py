@@ -62,15 +62,16 @@ def _subset_warm(lp1: LPResult, sel: np.ndarray, n: int) -> Optional[WarmStart]:
     return WarmStart(new_basis, at_upper)
 
 
-def dual_reducer(query: PackageQuery, table: Dict[str, np.ndarray],
-                 S: np.ndarray, *, q: int = 500,
+def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
                  rng: Optional[np.random.Generator] = None,
                  max_lp_iters: int = 20000,
                  ilp_kwargs: Optional[dict] = None,
                  aux: str = "lp", warm_start=None) -> PackageResult:
     """aux: 'lp' (paper's auxiliary LP, line 4-5) | 'random' (Mini-Exp 4
     ablation: random sample of ~q tuples instead).  warm_start seeds the
-    first LP (see module docstring)."""
+    first LP (see module docstring).  ``table`` may be a dict of arrays or
+    a Relation: only the <= |S| candidate rows are ever gathered (the
+    out-of-core contract — S carries tuple ids, never tuples)."""
     rng = rng or np.random.default_rng(0)
     ilp_kwargs = dict(ilp_kwargs or {})
     S = np.asarray(S)

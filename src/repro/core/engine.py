@@ -5,11 +5,22 @@
     result = engine.solve(query)             # Progressive Shading
     base   = engine.solve_direct(query)      # black-box ILP (Gurobi stand-in)
     sr     = engine.solve_sketchrefine(query)
+
+``table`` may be a dict of resident numpy columns or any
+:class:`~repro.core.relation.Relation` (e.g. ``MemmapRelation`` over an
+on-disk matrix).  Streamed relations run the whole pipeline out-of-core:
+layer 0 is partitioned through the bucketing backend (Appendix D.2,
+``memory_rows`` bounding the resident set), the shading cascade passes
+candidate-id subsets down, and Dual Reducer / validation gather only the
+<= alpha candidate rows — an end-to-end solve holds O(alpha +
+memory_rows) rows resident.  ``solve_direct``/``lp_bound`` assemble their
+full-relation form chunk-wise behind a size guard (they are the
+full-materialisation baselines by definition).
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -18,32 +29,44 @@ from repro.core.dual_reducer import PackageResult, dual_reducer
 from repro.core.hierarchy import Hierarchy
 from repro.core.lp import OPTIMAL, solve_lp_np
 from repro.core.paql import PackageQuery
+from repro.core.relation import Relation, as_relation
 from repro.core.shading import progressive_shading
 from repro.core.sketchrefine import sketch_refine
 
 
 class PackageQueryEngine:
-    def __init__(self, table: Dict[str, np.ndarray], attrs: Sequence[str],
+    def __init__(self, table, attrs: Sequence[str],
                  *, d_f: int = 100, alpha: int = 100_000,
-                 seed: int = 0, partitioner_backend: str = "dlv"):
-        self.table = table
+                 seed: int = 0, partitioner_backend: str = "dlv",
+                 layer0_backend: Optional[str] = None,
+                 chunk_rows: Optional[int] = None,
+                 memory_rows: Optional[int] = None, mesh=None):
+        self.table: Relation = as_relation(table, columns=list(attrs))
         self.attrs = list(attrs)
         self.d_f = d_f
         self.alpha = alpha
         self.partitioner_backend = partitioner_backend
+        self.layer0_backend = layer0_backend
+        self.chunk_rows = chunk_rows
+        self.memory_rows = memory_rows
+        self.mesh = mesh
         self.rng = np.random.default_rng(seed)
         self.hierarchy: Optional[Hierarchy] = None
         self.partition_time_s: float = 0.0
 
     @property
     def n(self) -> int:
-        return len(next(iter(self.table.values())))
+        return self.table.num_rows
 
     def partition(self) -> "PackageQueryEngine":
         t0 = time.time()
         self.hierarchy = Hierarchy(self.table, self.attrs, d_f=self.d_f,
                                    alpha=self.alpha, rng=self.rng,
-                                   backend=self.partitioner_backend)
+                                   backend=self.partitioner_backend,
+                                   layer0_backend=self.layer0_backend,
+                                   chunk_rows=self.chunk_rows,
+                                   memory_rows=self.memory_rows,
+                                   mesh=self.mesh)
         self.partition_time_s = time.time() - t0
         return self
 
@@ -65,7 +88,9 @@ class PackageQueryEngine:
 
     def solve_direct(self, query: PackageQuery,
                      ilp_kwargs: Optional[dict] = None) -> PackageResult:
-        """Black-box ILP over the full relation (the Gurobi role)."""
+        """Black-box ILP over the full relation (the Gurobi role).  The
+        standard form streams chunk-wise off a Relation; a size guard
+        raises for relations too large to hold densely."""
         c, A, bl, bu, ub = query.matrices(self.table, None)
         res = ilp_mod.solve_ilp(c, A, bl, bu, ub, **(ilp_kwargs or {}))
         if not res.feasible:
@@ -81,10 +106,13 @@ class PackageQueryEngine:
                            tau_frac: float = 0.001,
                            ilp_kwargs: Optional[dict] = None) -> PackageResult:
         return sketch_refine(query, self.table, self.attrs,
-                             tau_frac=tau_frac, ilp_kwargs=ilp_kwargs)
+                             tau_frac=tau_frac, ilp_kwargs=ilp_kwargs,
+                             memory_rows=self.memory_rows,
+                             chunk_rows=self.chunk_rows)
 
     def lp_bound(self, query: PackageQuery) -> float:
-        """LP relaxation over the full relation (integrality-gap metric)."""
+        """LP relaxation over the full relation (integrality-gap metric).
+        Streams its matrix assembly like solve_direct (same size guard)."""
         c, A, bl, bu, ub = query.matrices(self.table, None)
         res = solve_lp_np(c, A, bl, bu, ub, max_iters=20000)
         if res.status != OPTIMAL:

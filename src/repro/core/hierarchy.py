@@ -11,20 +11,35 @@ that partitioned layer l-1; its groups ARE the layer-l tuples, giving:
     get_group_batch(l, T)                              (vectorized descent)
 
 The partitioning strategy is selected by name through the Partitioner
-registry (``backend="dlv" | "kdtree" | "bucketing"``).  For huge layer-0
-relations pass ``chunk_rows`` (and optionally a ``mesh``): group stats are
-then accumulated chunk by chunk — sharded across the mesh with psum
-reduction — so the layer-0 sorted copy never materializes host-side.
+registry (``backend="dlv" | "kdtree" | "bucketing"``).
+
+Out-of-core layer 0: the hierarchy accepts any
+:class:`~repro.core.relation.Relation` (or a dict of arrays, which becomes
+an :class:`~repro.core.relation.ArrayRelation`).  A streamed relation is
+partitioned through the ``bucketing`` backend — the default for
+out-of-core sources — consuming the relation chunk-by-chunk without ever
+materialising the layer-0 attribute matrix; ``memory_rows`` bounds the
+per-bucket resident set and ``mesh`` shards the streaming stats passes.
+For in-memory tables ``chunk_rows`` (optionally with ``mesh``) still
+routes layer-0 group stats through the chunked / mesh-sharded
+accumulation, as before.
+
+Appends (the Stochastic SketchRefine re-partitioning story): see
+:meth:`Hierarchy.append` — new tuples descend to their layer-0 leaf via
+the split tree, leaf counts/moments grow, and leaves whose total variance
+crosses the build-time bar are reported for a local re-split (the re-split
+itself is a ROADMAP item).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import partitioner
 from repro.core.partitioner import Partition
+from repro.core.relation import Relation, as_relation
 
 _EXACT_GAP_LIMIT = 2_000_000
 _GAP_SAMPLE = 200_000
@@ -57,44 +72,96 @@ def _min_gap(X: np.ndarray, *, exact_limit: int = _EXACT_GAP_LIMIT,
 
 @dataclasses.dataclass
 class Layer:
-    table: Dict[str, np.ndarray]
-    X: np.ndarray                    # (n_l, k) attr matrix (column order = attrs)
+    table: Union[Relation, Dict[str, np.ndarray]]
+    X: Optional[np.ndarray]          # (n_l, k) attr matrix; None = streamed
     part: Optional[Partition]        # partition of layer l-1 (None for layer 0)
     eps: float                       # min positive attr gap (Alg 3, line 1)
 
     @property
     def size(self) -> int:
-        return self.X.shape[0]
+        if self.X is not None:
+            return self.X.shape[0]
+        return self.table.num_rows
+
+
+@dataclasses.dataclass
+class AppendReport:
+    """Result of one :meth:`Hierarchy.append` call."""
+    gids: np.ndarray          # layer-0 leaf (group) id per appended tuple
+    flagged: np.ndarray       # leaves whose total variance crossed the bar
+    tv_bar: float             # the bar the leaves were compared against
 
 
 class Hierarchy:
-    def __init__(self, table: Dict[str, np.ndarray], attrs: Sequence[str],
+    def __init__(self, table, attrs: Sequence[str],
                  d_f: int = 100, alpha: int = 100_000,
                  rng: Optional[np.random.Generator] = None,
                  max_layers: int = 12, backend: str = "dlv",
+                 layer0_backend: Optional[str] = None,
                  backend_kwargs: Optional[dict] = None,
-                 mesh=None, chunk_rows: Optional[int] = None):
+                 mesh=None, chunk_rows: Optional[int] = None,
+                 memory_rows: Optional[int] = None):
         self.attrs = list(attrs)
         self.d_f = d_f
         self.alpha = alpha
         self.backend = backend
         rng = rng or np.random.default_rng(0)
-        X0 = np.stack([np.asarray(table[a], np.float64) for a in self.attrs],
-                      axis=1)
-        self.layers: List[Layer] = [
-            Layer({a: X0[:, i] for i, a in enumerate(self.attrs)}, X0, None,
-                  _min_gap(X0, rng=rng))]
+        rel = as_relation(table, columns=self.attrs)
+        self.relation = rel
+        if layer0_backend is None:
+            # streamed relations default layer 0 to the one chunk-capable
+            # backend; upper layers (rep arrays) keep ``backend``
+            layer0_backend = "bucketing" \
+                if (not rel.in_memory and backend == "dlv") else backend
+        if not rel.in_memory and layer0_backend != "bucketing":
+            raise TypeError(
+                f"partitioner backend {layer0_backend!r} cannot consume a "
+                "streamed relation (only 'bucketing' scans ChunkSources); "
+                "pass an in-memory table or layer0_backend='bucketing'")
+        self.layer0_backend = layer0_backend
+        if rel.in_memory:
+            X0 = np.stack([np.asarray(rel[a], np.float64)
+                           for a in self.attrs], axis=1)
+            self.layers: List[Layer] = [
+                Layer(rel, X0, None, _min_gap(X0, rng=rng))]
+        else:
+            # layer-0 eps is never consumed (Neighbor Sampling probes only
+            # layers >= 1), so a streamed build skips the sample gather
+            self.layers = [Layer(rel, None, None, 1e-9)]
         kw = dict(backend_kwargs or {})
+        self._append_state: Optional[dict] = None
         while self.layers[-1].size > alpha and len(self.layers) <= max_layers:
-            Xl = self.layers[-1].X
-            layer_kw = dict(kw)
-            if len(self.layers) == 1 and chunk_rows is not None:
-                # layer 0 is the big one: chunked (optionally mesh-sharded)
-                # group-stats accumulation instead of a full sorted copy
-                layer_kw.update(chunk_rows=chunk_rows, mesh=mesh)
-            part = partitioner.fit(Xl, backend=backend, d_f=d_f, rng=rng,
-                                   **layer_kw)
-            if part.num_groups >= Xl.shape[0]:
+            if len(self.layers) == 1 and not rel.in_memory:
+                # streamed layer 0: the bucketing backend consumes the
+                # relation chunk-by-chunk (Appendix D.2) — the attribute
+                # matrix never materialises
+                layer_kw = dict(kw)
+                if memory_rows is not None:
+                    layer_kw.setdefault("memory_rows", memory_rows)
+                if chunk_rows is not None:
+                    layer_kw.setdefault("chunk_rows", chunk_rows)
+                if mesh is not None:
+                    layer_kw.setdefault("mesh", mesh)
+                part = partitioner.fit(
+                    rel.chunk_source(self.attrs, chunk_rows),
+                    backend=layer0_backend, d_f=d_f, rng=rng, **layer_kw)
+            else:
+                Xl = self.layers[-1].X
+                lb = layer0_backend if len(self.layers) == 1 else backend
+                layer_kw = dict(kw)
+                if len(self.layers) == 1 and chunk_rows is not None:
+                    # layer 0 is the big one: chunked (optionally mesh-
+                    # sharded) group-stats accumulation instead of a full
+                    # sorted copy
+                    layer_kw.update(chunk_rows=chunk_rows, mesh=mesh)
+                if len(self.layers) == 1 and lb == "bucketing" and \
+                        memory_rows is not None:
+                    # same bucket layout as the streamed path -> in-memory
+                    # and memmap builds of the same data stay bit-identical
+                    layer_kw.setdefault("memory_rows", memory_rows)
+                part = partitioner.fit(Xl, backend=lb, d_f=d_f,
+                                       rng=rng, **layer_kw)
+            if part.num_groups >= self.layers[-1].size:
                 break  # no reduction possible
             reps = part.reps
             tbl = {a: reps[:, i] for i, a in enumerate(self.attrs)}
@@ -122,3 +189,77 @@ class Hierarchy:
     def group_box(self, l: int, g: int):
         part = self.layers[l].part
         return part.boxes_lo[g], part.boxes_hi[g]
+
+    # --------------------------------------------------------- appends
+    def _init_append_state(self) -> dict:
+        """Per-leaf (count, sum, sumsq) of the layer-0 partition, computed
+        once with a chunked bincount pass over the relation; the total-
+        variance bar is the worst build-time leaf."""
+        part = self.layers[1].part
+        G = part.num_groups
+        k = len(self.attrs)
+        cnt = part.counts.astype(np.float64).copy()
+        s1 = np.zeros((G, k))
+        s2 = np.zeros((G, k))
+        a = 0
+        for block in self.relation.chunks(tuple(self.attrs)):
+            ids = part.gid[a:a + len(block)]
+            for j in range(k):
+                s1[:, j] += np.bincount(ids, weights=block[:, j],
+                                        minlength=G)
+                s2[:, j] += np.bincount(ids, weights=block[:, j] ** 2,
+                                        minlength=G)
+            a += len(block)
+        nz = np.maximum(cnt, 1.0)[:, None]
+        var = np.maximum(s2 / nz - (s1 / nz) ** 2, 0.0)
+        tv = cnt * var.max(axis=1)
+        return {"cnt": cnt, "s1": s1, "s2": s2,
+                "tv_bar": float(tv.max()) if G else 0.0}
+
+    def append(self, rows, *, tv_bar: Optional[float] = None
+               ) -> AppendReport:
+        """Fast-path append toward Stochastic SketchRefine re-partitioning.
+
+        ``rows`` (a dict of columns or an (r, k) array in ``attrs`` order)
+        descend the layer-0 split tree in ONE ``get_group_batch``; each
+        leaf's count / per-attribute moments grow incrementally, and the
+        report lists every leaf whose total variance (|P| * max_j var_j)
+        now exceeds ``tv_bar`` (default: the worst leaf at build time) —
+        those are the candidates for a local re-split seeded as a
+        ``dlv_rounds`` frontier (the re-split itself stays a ROADMAP
+        item).  The base relation and split tree are NOT rewritten here.
+        """
+        if self.L < 1:
+            raise ValueError("hierarchy has no partition layer to append "
+                             "into")
+        if isinstance(rows, dict):
+            R = np.stack([np.asarray(rows[a], np.float64)
+                          for a in self.attrs], axis=1)
+        else:
+            R = np.atleast_2d(np.asarray(rows, np.float64))
+        if R.shape[1] != len(self.attrs):
+            raise ValueError(f"appended rows have {R.shape[1]} attrs, "
+                             f"hierarchy has {len(self.attrs)}")
+        if self._append_state is None:
+            self._append_state = self._init_append_state()
+        st = self._append_state
+        gids = np.asarray(self.layers[1].part.get_group_batch(R), np.int64)
+        G = len(st["cnt"])
+        st["cnt"] += np.bincount(gids, minlength=G)
+        for j in range(R.shape[1]):
+            st["s1"][:, j] += np.bincount(gids, weights=R[:, j],
+                                          minlength=G)
+            st["s2"][:, j] += np.bincount(gids, weights=R[:, j] ** 2,
+                                          minlength=G)
+        bar = st["tv_bar"] if tv_bar is None else float(tv_bar)
+        nz = np.maximum(st["cnt"], 1.0)[:, None]
+        var = np.maximum(st["s2"] / nz - (st["s1"] / nz) ** 2, 0.0)
+        tv = st["cnt"] * var.max(axis=1)
+        return AppendReport(gids, np.flatnonzero(tv > bar), bar)
+
+    @property
+    def leaf_counts(self) -> np.ndarray:
+        """Layer-0 leaf sizes including appended tuples."""
+        if self._append_state is not None:
+            return self._append_state["cnt"].astype(np.int64)
+        return self.layers[1].part.counts

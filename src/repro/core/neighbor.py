@@ -19,6 +19,7 @@ from typing import List, Set
 import numpy as np
 
 from repro.core.hierarchy import Hierarchy
+from repro.core.relation import gather_column
 
 MAX_PROBE_ATTRS = 8  # 3^8 = 6561 probes; queries use <= ~5 attrs
 
@@ -65,7 +66,9 @@ def neighbor_sampling(hier: Hierarchy, l: int, alpha: int,
     cand = np.unique(np.concatenate(members)) if members else \
         np.zeros(0, np.int64)
     if len(cand) > alpha:
-        obj_lm1 = hier.layers[l - 1].table[obj_attr][cand]
+        # layer l-1 may be the streamed layer-0 relation: gather only the
+        # candidate rows of the objective column
+        obj_lm1 = gather_column(hier.layers[l - 1].table, obj_attr, cand)
         order = np.argsort(-obj_lm1 if maximize else obj_lm1, kind="stable")
         cand = np.sort(cand[order[:alpha]])
     return cand

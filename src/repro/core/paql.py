@@ -1,6 +1,7 @@
 """PaQL-style package queries and their ILP/LP standard forms.
 
-A package query over a relation R (columns = named float arrays):
+A package query over a relation R (columns = named float arrays, OR a
+:class:`repro.core.relation.Relation` for out-of-core tables):
 
     SELECT PACKAGE(*) FROM R REPEAT r
     WHERE <local predicate mask>
@@ -14,6 +15,15 @@ maps to the ILP  opt cᵀx  s.t.  bl <= Ax <= bu,  0 <= x <= r+1,  x ∈ ℤ.
 
 AVG(P.a) >= t is linearised as SUM(P.a) - t*COUNT(P) >= 0, i.e. a row with
 coefficients (a_i - t).
+
+Out-of-core path: ``matrices(rel, subset)`` builds the candidate-resident
+standard form from ONE ``gather_rows`` over the query's attributes — the
+whole pipeline (shading layers, Dual Reducer, validation) passes tuple-id
+subsets around and only ever materialises O(|subset|) rows.  With
+``subset=None`` over a streamed relation the (m, n) assembly is filled
+chunk-wise (each constraint row is a plain column gather) behind a size
+guard, since a dense full-relation form at 10^9 tuples is exactly what the
+paper's architecture avoids.
 """
 from __future__ import annotations
 
@@ -23,6 +33,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 INF = float("inf")
+
+# Dense full-relation (c, A, ub) assembly guard for streamed relations:
+# raise above this many bytes instead of silently materialising.
+FULL_MATRIX_BUDGET_BYTES = 4 << 30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +56,20 @@ class Constraint:
         return col
 
 
+def _is_streamed(table) -> bool:
+    from repro.core.relation import Relation
+    return isinstance(table, Relation) and not table.in_memory
+
+
+def _gather_view(table, names: Sequence[str],
+                 idx: np.ndarray) -> Dict[str, np.ndarray]:
+    """The rows ``idx`` of the named columns, for a dict or a Relation."""
+    from repro.core.relation import Relation
+    if isinstance(table, Relation):
+        return table.gather_rows(idx, tuple(names))
+    return {nm: np.asarray(table[nm], np.float64)[idx] for nm in names}
+
+
 @dataclasses.dataclass(frozen=True)
 class PackageQuery:
     objective_attr: str
@@ -54,24 +82,26 @@ class PackageQuery:
     def m(self) -> int:
         return len(self.constraints)
 
-    # ------------------------------------------------------------------
-    def matrices(self, table: Dict[str, np.ndarray],
-                 subset: Optional[np.ndarray] = None):
-        """Dense (c, A, bl, bu, ub) for the tuples in ``subset`` (or all).
+    def needed_attrs(self, table=None) -> List[str]:
+        """Columns this query touches (objective, constraints, predicate —
+        the predicate only where the table actually carries it)."""
+        names = [self.objective_attr]
+        for ct in self.constraints:
+            if ct.attr is not None and ct.attr not in names:
+                names.append(ct.attr)
+        if self.predicate_attr is not None and \
+                self.predicate_attr not in names and \
+                (table is None or self.predicate_attr in table):
+            names.append(self.predicate_attr)
+        return names
 
-        Returns the MINIMIZATION form: internal c is negated for MAXIMIZE.
-        """
-        any_col = next(iter(table.values()))
-        n_all = len(any_col)
-        idx = np.arange(n_all) if subset is None else np.asarray(subset)
-        view = {k: np.asarray(v, np.float64)[idx] for k, v in table.items()}
-        n = len(idx)
+    # ------------------------------------------------------------------
+    def _assemble(self, view: Dict[str, np.ndarray], n: int):
         c = np.asarray(view[self.objective_attr], np.float64).copy()
         if self.maximize:
             c = -c
-        A = np.stack([ct.coeffs(view, n) for ct in self.constraints])
-        bl = np.array([ct.lo for ct in self.constraints], np.float64)
-        bu = np.array([ct.hi for ct in self.constraints], np.float64)
+        A = np.stack([ct.coeffs(view, n) for ct in self.constraints]) \
+            if self.constraints else np.zeros((0, n))
         ub = np.full(n, self.repeat + 1, np.float64)
         # Local predicates (Appendix E): applied where the column exists —
         # layer-0 tables carry it (final ILP forces ub=0 on excluded
@@ -79,18 +109,70 @@ class PackageQuery:
         # until the final layer, the paper's "efficient approach").
         if self.predicate_attr is not None and self.predicate_attr in view:
             ub = ub * np.asarray(view[self.predicate_attr], np.float64)
+        return c, A, ub
+
+    def matrices(self, table, subset: Optional[np.ndarray] = None):
+        """Dense (c, A, bl, bu, ub) for the tuples in ``subset`` (or all).
+
+        Returns the MINIMIZATION form: internal c is negated for MAXIMIZE.
+        ``table`` may be a dict of arrays or any Relation; only the
+        query's own attributes are ever gathered.
+        """
+        bl = np.array([ct.lo for ct in self.constraints], np.float64)
+        bu = np.array([ct.hi for ct in self.constraints], np.float64)
+        names = self.needed_attrs(table)
+        if subset is not None:
+            idx = np.asarray(subset)
+            view = _gather_view(table, names, idx)
+            c, A, ub = self._assemble(view, len(idx))
+            return c, A, bl, bu, ub
+        if not _is_streamed(table):
+            # dict of arrays, or an in-memory Relation (columns resident)
+            view = {nm: np.asarray(table[nm], np.float64) for nm in names}
+            n = len(view[self.objective_attr])
+            c, A, ub = self._assemble(view, n)
+            return c, A, bl, bu, ub
+        # streamed full-relation assembly: chunk-wise column gathers
+        n = table.num_rows
+        need = (self.m + 2) * n * 8
+        if need > FULL_MATRIX_BUDGET_BYTES:
+            raise ValueError(
+                f"full-relation matrix assembly over {n} streamed rows "
+                f"needs ~{need / 1e9:.1f} GB (> "
+                f"{FULL_MATRIX_BUDGET_BYTES / 1e9:.1f} GB budget); use the "
+                "hierarchical solver (engine.solve) for out-of-core "
+                "relations, or raise repro.core.paql."
+                "FULL_MATRIX_BUDGET_BYTES explicitly")
+        c = np.empty(n, np.float64)
+        A = np.empty((self.m, n), np.float64)
+        ub = np.empty(n, np.float64)
+        a = 0
+        for block in table.chunks(tuple(names)):
+            b = a + len(block)
+            view = {nm: block[:, j] for j, nm in enumerate(names)}
+            cc, Ac, uc = self._assemble(view, b - a)
+            c[a:b] = cc
+            A[:, a:b] = Ac
+            ub[a:b] = uc
+            a = b
         return c, A, bl, bu, ub
 
-    def objective_value(self, table: Dict[str, np.ndarray],
-                        idx: np.ndarray, mult: np.ndarray) -> float:
-        col = np.asarray(table[self.objective_attr], np.float64)
-        return float(np.dot(col[idx], mult))
+    def objective_value(self, table, idx: np.ndarray,
+                        mult: np.ndarray) -> float:
+        col = _gather_view(table, (self.objective_attr,),
+                           np.asarray(idx))[self.objective_attr]
+        return float(np.dot(col, mult))
 
-    def check_package(self, table: Dict[str, np.ndarray], idx: np.ndarray,
+    def check_package(self, table, idx: np.ndarray,
                       mult: np.ndarray, tol: float = 1e-6) -> bool:
+        """Validate the package against the relation — one gather of the
+        package's own rows (streamed columns for out-of-core tables)."""
+        idx = np.asarray(idx)
+        names = [ct.attr for ct in self.constraints if ct.attr is not None]
+        view = _gather_view(table, list(dict.fromkeys(names)), idx) \
+            if names else {}
         for ct in self.constraints:
-            coeff = ct.coeffs({k: np.asarray(v, np.float64)[idx]
-                               for k, v in table.items()}, len(idx))
+            coeff = ct.coeffs(view, len(idx))
             val = float(np.dot(coeff, mult))
             if val < ct.lo - tol or val > ct.hi + tol:
                 return False

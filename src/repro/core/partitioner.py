@@ -219,7 +219,9 @@ def available_backends():
 
 
 def fit(X, *, backend: str = "dlv", **kwargs) -> Partition:
-    """Partition ``X`` (array, or a ChunkSource for ``bucketing``)."""
+    """Partition ``X`` (array, or a ChunkSource for ``bucketing`` — e.g.
+    ``Relation.chunk_source()`` for an out-of-core table; the bucketing
+    backend also accepts ``mesh=`` to shard its streaming stats passes)."""
     _ensure_backends()
     if backend not in _BACKENDS:
         raise ValueError(f"unknown partitioner backend {backend!r}; "

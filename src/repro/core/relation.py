@@ -1,0 +1,435 @@
+"""Out-of-core ``Relation``: the streamed table every layer consumes.
+
+The paper's headline regime is 10^9 tuples processed out-of-core
+(Appendix D.2); this module makes that relation a first-class object the
+whole query path shares instead of a dict of resident numpy columns:
+
+* :class:`Relation` — a named-column table backed by chunked scans.  The
+  contract is intentionally tiny: ``chunks()`` streams ``(n_i, k)`` blocks
+  for a subset of columns, ``gather_rows(idx)`` materialises an arbitrary
+  index subset (sorted-index gather in chunk order, result restored to the
+  caller's order), and ``reduce_columns`` folds a streamed per-column
+  reduction without ever holding more than one chunk.  ``rel[name]`` gives
+  dict-style column access so existing call sites keep working: in-memory
+  relations hand back the real array, out-of-core relations hand back a
+  :class:`LazyColumn` that supports fancy indexing (a gather) but refuses
+  silent whole-column materialisation.
+* :class:`ArrayRelation` — adapter making every existing dict-of-arrays
+  table a Relation (zero copy).
+* :class:`MemmapRelation` — an on-disk ``(n, k)`` ``.npy``/raw-binary
+  matrix with named columns; ``gather_rows`` fancy-indexes the memmap on
+  the sorted ids so only touched pages are read.
+* :class:`SourceRelation` — wraps any ``ChunkSource`` (the bucketing
+  protocol), so anything that can be scanned is a Relation.
+
+Resident-set accounting: every materialisation (chunk or gather) calls
+:func:`note_resident`; benchmarks read :func:`peak_resident_rows` to prove
+an end-to-end solve held only O(alpha + memory_rows) rows, which is the
+acceptance bar for the out-of-core pipeline.  :class:`CountingSource`
+wraps a ChunkSource and counts full streaming passes for the same purpose.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bucketing import ArraySource, ChunkSource, MemmapSource
+
+DEFAULT_CHUNK_ROWS = 1 << 18
+
+# ------------------------------------------------------ resident tracking
+
+_PEAK = {"rows": 0}
+
+
+def note_resident(rows: int) -> None:
+    """Record a materialisation of ``rows`` rows (chunk, gather, bucket)."""
+    if rows > _PEAK["rows"]:
+        _PEAK["rows"] = int(rows)
+
+
+def peak_resident_rows() -> int:
+    return _PEAK["rows"]
+
+
+def reset_peak_resident() -> None:
+    _PEAK["rows"] = 0
+
+
+def _normalize_idx(idx, num_rows: int) -> np.ndarray:
+    """Row selector -> validated int64 id array: boolean masks become
+    ``flatnonzero`` (the dict-column idiom), negative / out-of-range ids
+    raise instead of silently wrapping."""
+    idx = np.asarray(idx)
+    if idx.dtype == bool:
+        if idx.shape != (num_rows,):
+            raise IndexError(f"boolean mask of shape {idx.shape} over "
+                             f"{num_rows} rows")
+        return np.flatnonzero(idx)
+    idx = idx.astype(np.int64, copy=False)
+    if len(idx):
+        lo, hi = int(idx.min()), int(idx.max())
+        if lo < 0:
+            raise IndexError(f"negative row id {lo}")
+        if hi >= num_rows:
+            raise IndexError(f"row id {hi} >= {num_rows}")
+    return idx
+
+
+# -------------------------------------------------------------- lazy column
+
+
+class LazyColumn:
+    """A named column of an out-of-core Relation.
+
+    Supports ``len`` and fancy ``__getitem__`` (one gather per call); any
+    attempt to materialise the whole column (``np.asarray``) raises so a
+    1e9-row column can never silently become resident.
+    """
+
+    def __init__(self, rel: "Relation", name: str):
+        self._rel = rel
+        self._name = name
+
+    def __len__(self) -> int:
+        return self._rel.num_rows
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            idx = np.arange(*idx.indices(self._rel.num_rows))
+        arr = np.asarray(idx)
+        sel = arr if arr.dtype == bool else np.atleast_1d(arr).ravel()
+        out = self._rel.gather_rows(sel, (self._name,))[self._name]
+        return float(out[0]) if arr.ndim == 0 else out
+
+    def __array__(self, dtype=None, copy=None):
+        raise RuntimeError(
+            f"refusing to materialise out-of-core column {self._name!r} "
+            f"({self._rel.num_rows} rows); use gather_rows(idx) / chunks() "
+            "to stay candidate-resident")
+
+
+# ----------------------------------------------------------------- Relation
+
+
+class Relation:
+    """Named-column, chunk-scanned table (see module docstring)."""
+
+    columns: Tuple[str, ...] = ()
+    in_memory: bool = False
+    chunk_rows: int = DEFAULT_CHUNK_ROWS
+
+    # --- required overrides -------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        raise NotImplementedError
+
+    def chunks(self, names: Optional[Sequence[str]] = None,
+               chunk_rows: Optional[int] = None) -> Iterator[np.ndarray]:
+        """Stream ``(n_i, len(names))`` float64 blocks in row order."""
+        raise NotImplementedError
+
+    # --- generic implementations --------------------------------------
+    def _cols(self, names: Optional[Sequence[str]]) -> Tuple[str, ...]:
+        if names is None:
+            return tuple(self.columns)
+        missing = [n for n in names if n not in self.columns]
+        if missing:
+            raise KeyError(f"unknown column(s) {missing}; have "
+                           f"{list(self.columns)}")
+        return tuple(names)
+
+    def column(self, name: str):
+        """Dict-style column access; lazy for out-of-core relations."""
+        self._cols((name,))
+        return LazyColumn(self, name)
+
+    def __getitem__(self, name: str):
+        return self.column(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    def keys(self):
+        return tuple(self.columns)
+
+    def gather_rows(self, idx: np.ndarray,
+                    names: Optional[Sequence[str]] = None
+                    ) -> Dict[str, np.ndarray]:
+        """Materialise the rows ``idx`` (any order, duplicates allowed).
+
+        Generic path: one streaming pass, gathering each chunk's members of
+        ``sort(idx)`` in chunk order, then the result is un-sorted back to
+        the caller's order — O(n/chunk) scan I/O, O(|idx|) resident.
+        """
+        names = self._cols(names)
+        idx = _normalize_idx(idx, self.num_rows)
+        order = np.argsort(idx, kind="stable")
+        sidx = idx[order]
+        out = np.empty((len(idx), len(names)), np.float64)
+        base = 0
+        lo = 0
+        for chunk in self.chunks(names):
+            nb = len(chunk)
+            hi = lo + np.searchsorted(sidx[lo:], base + nb)
+            if hi > lo:
+                out[order[lo:hi]] = chunk[sidx[lo:hi] - base]
+                lo = hi
+            base += nb
+            if lo >= len(sidx):
+                break
+        if lo < len(sidx):
+            raise IndexError(f"row ids out of range: {sidx[lo]} >= {base}")
+        note_resident(len(idx))
+        return {nm: out[:, j] for j, nm in enumerate(names)}
+
+    def gather_matrix(self, idx: np.ndarray,
+                      names: Optional[Sequence[str]] = None) -> np.ndarray:
+        names = self._cols(names)
+        view = self.gather_rows(idx, names)
+        return np.stack([view[nm] for nm in names], axis=1)
+
+    def reduce_columns(self, names: Optional[Sequence[str]], chunk_fn,
+                       combine, init=None):
+        """Streamed per-column reduction: fold ``combine(acc,
+        chunk_fn(block))`` over all chunks (``acc`` starts as ``init`` or
+        the first chunk's value)."""
+        acc = init
+        first = init is None
+        for chunk in self.chunks(names):
+            v = chunk_fn(chunk)
+            acc = v if first else combine(acc, v)
+            first = False
+        return acc
+
+    def chunk_source(self, names: Optional[Sequence[str]] = None,
+                     chunk_rows: Optional[int] = None) -> ChunkSource:
+        """This relation's columns as a bucketing-protocol ChunkSource."""
+        return _RelationSource(self, self._cols(names),
+                               chunk_rows or self.chunk_rows)
+
+
+class _RelationSource(ChunkSource):
+    """ChunkSource over a fixed column subset of a Relation."""
+
+    def __init__(self, rel: Relation, names: Tuple[str, ...],
+                 chunk_rows: int):
+        self.rel = rel
+        self.names = names
+        self.chunk_rows = chunk_rows
+
+    def chunks(self, chunk_rows: int) -> Iterator[np.ndarray]:
+        return self.rel.chunks(self.names, chunk_rows)
+
+    @property
+    def num_rows(self) -> int:
+        return self.rel.num_rows
+
+    @property
+    def num_cols(self) -> int:
+        return len(self.names)
+
+
+# ------------------------------------------------------------ ArrayRelation
+
+
+class ArrayRelation(Relation):
+    """Every dict-of-arrays table is a Relation (zero-copy adapter)."""
+
+    in_memory = True
+
+    def __init__(self, table: Dict[str, np.ndarray]):
+        self._table = {k: np.asarray(v) for k, v in table.items()}
+        self.columns = tuple(self._table)
+        lens = {len(v) for v in self._table.values()}
+        if len(lens) > 1:
+            raise ValueError(f"ragged columns: {lens}")
+
+    @property
+    def num_rows(self) -> int:
+        return len(next(iter(self._table.values()))) if self._table else 0
+
+    def column(self, name: str) -> np.ndarray:
+        return self._table[name]
+
+    def chunks(self, names=None, chunk_rows=None) -> Iterator[np.ndarray]:
+        names = self._cols(names)
+        step = chunk_rows or self.chunk_rows
+        n = self.num_rows
+        for a in range(0, n, step):
+            b = min(a + step, n)
+            yield np.stack([np.asarray(self._table[nm][a:b], np.float64)
+                            for nm in names], axis=1)
+
+    def gather_rows(self, idx, names=None) -> Dict[str, np.ndarray]:
+        names = self._cols(names)
+        idx = _normalize_idx(idx, self.num_rows)
+        note_resident(len(idx))
+        return {nm: np.asarray(self._table[nm], np.float64)[idx]
+                for nm in names}
+
+
+# ----------------------------------------------------------- MemmapRelation
+
+
+class MemmapRelation(Relation):
+    """On-disk ``(n, k)`` matrix with named columns (the container-scale
+    stand-in for the paper's PostgreSQL heap file)."""
+
+    in_memory = False
+
+    def __init__(self, X: np.ndarray, columns: Sequence[str],
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS):
+        if X.ndim != 2 or X.shape[1] != len(columns):
+            raise ValueError(f"need (n, {len(columns)}) data, got {X.shape}")
+        self.X = X
+        self.columns = tuple(columns)
+        self.chunk_rows = chunk_rows
+
+    @classmethod
+    def from_npy(cls, path: str, columns: Sequence[str],
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS) -> "MemmapRelation":
+        return cls(np.lib.format.open_memmap(path, mode="r"), columns,
+                   chunk_rows)
+
+    @classmethod
+    def from_raw(cls, path: str, columns: Sequence[str], *, rows: int,
+                 dtype=np.float64, offset: int = 0,
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS) -> "MemmapRelation":
+        """Headerless binary file: row-major (rows, len(columns))."""
+        X = np.memmap(path, dtype=dtype, mode="r", offset=offset,
+                      shape=(rows, len(columns)))
+        return cls(X, columns, chunk_rows)
+
+    @property
+    def num_rows(self) -> int:
+        return self.X.shape[0]
+
+    def _col_idx(self, names: Tuple[str, ...]) -> np.ndarray:
+        pos = {nm: j for j, nm in enumerate(self.columns)}
+        return np.asarray([pos[nm] for nm in names], np.int64)
+
+    def chunks(self, names=None, chunk_rows=None) -> Iterator[np.ndarray]:
+        names = self._cols(names)
+        cj = self._col_idx(names)
+        step = chunk_rows or self.chunk_rows
+        full = len(names) == len(self.columns) and \
+            np.array_equal(cj, np.arange(len(self.columns)))
+        for a in range(0, self.num_rows, step):
+            b = min(a + step, self.num_rows)
+            block = np.asarray(self.X[a:b], np.float64)
+            note_resident(b - a)
+            yield block if full else block[:, cj]
+
+    def gather_rows(self, idx, names=None) -> Dict[str, np.ndarray]:
+        """Sorted-index gather: only the touched memmap pages are read."""
+        names = self._cols(names)
+        cj = self._col_idx(names)
+        idx = _normalize_idx(idx, self.num_rows)
+        order = np.argsort(idx, kind="stable")
+        rows = np.empty((len(idx), len(self.columns)), np.float64)
+        rows[order] = self.X[idx[order]]
+        note_resident(len(idx))
+        return {nm: rows[:, cj[j]] for j, nm in enumerate(names)}
+
+    def chunk_source(self, names=None, chunk_rows=None) -> ChunkSource:
+        names = self._cols(names)
+        cj = self._col_idx(names)
+        if len(names) == len(self.columns) and \
+                np.array_equal(cj, np.arange(len(self.columns))):
+            src = MemmapSource.__new__(MemmapSource)
+            src.X = self.X
+            return src
+        return super().chunk_source(names, chunk_rows)
+
+
+# ----------------------------------------------------------- SourceRelation
+
+
+class SourceRelation(Relation):
+    """Any ``ChunkSource`` scan is a Relation once its columns are named."""
+
+    in_memory = False
+
+    def __init__(self, source: ChunkSource, columns: Sequence[str],
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS):
+        if source.num_cols != len(columns):
+            raise ValueError(f"source has {source.num_cols} cols, "
+                             f"{len(columns)} names given")
+        self.source = source
+        self.columns = tuple(columns)
+        self.chunk_rows = chunk_rows
+
+    @property
+    def num_rows(self) -> int:
+        return self.source.num_rows
+
+    def chunks(self, names=None, chunk_rows=None) -> Iterator[np.ndarray]:
+        names = self._cols(names)
+        pos = {nm: j for j, nm in enumerate(self.columns)}
+        cj = np.asarray([pos[nm] for nm in names], np.int64)
+        full = np.array_equal(cj, np.arange(len(self.columns)))
+        for block in self.source.chunks(chunk_rows or self.chunk_rows):
+            note_resident(len(block))
+            yield block if full else block[:, cj]
+
+
+# -------------------------------------------------------------- conversion
+
+
+def as_relation(obj, columns: Optional[Sequence[str]] = None) -> Relation:
+    """Coerce a table-ish object to a Relation.
+
+    dict-of-arrays -> :class:`ArrayRelation`; ChunkSource -> a
+    :class:`SourceRelation` (``columns`` required, or a MemmapSource
+    becomes a :class:`MemmapRelation`); Relations pass through.
+    """
+    if isinstance(obj, Relation):
+        return obj
+    if isinstance(obj, ChunkSource):
+        if columns is None:
+            raise ValueError("need column names to wrap a ChunkSource")
+        if isinstance(obj, ArraySource) and hasattr(obj, "X") and \
+                getattr(obj.X, "ndim", 0) == 2:
+            return MemmapRelation(obj.X, columns)
+        return SourceRelation(obj, columns)
+    if isinstance(obj, dict):
+        return ArrayRelation(obj)
+    raise TypeError(f"cannot make a Relation from {type(obj).__name__}")
+
+
+def gather_column(table, name: str, idx: np.ndarray) -> np.ndarray:
+    """One column at ``idx`` (int ids or a boolean mask) for a dict table
+    OR a Relation (shared by the shading / neighbor candidate paths)."""
+    idx = np.asarray(idx)
+    if isinstance(table, Relation) and not table.in_memory:
+        return table.gather_rows(idx, (name,))[name]
+    return np.asarray(table[name], np.float64)[idx]
+
+
+# --------------------------------------------------------- pass accounting
+
+
+class CountingSource(ChunkSource):
+    """Wraps a ChunkSource and counts full streaming passes + rows read —
+    the benchmark instrument proving the bucketed build is O(1) passes."""
+
+    def __init__(self, inner: ChunkSource):
+        self.inner = inner
+        self.passes = 0
+        self.rows_read = 0
+
+    def chunks(self, chunk_rows: int) -> Iterator[np.ndarray]:
+        self.passes += 1
+        for c in self.inner.chunks(chunk_rows):
+            self.rows_read += len(c)
+            yield c
+
+    @property
+    def num_rows(self) -> int:
+        return self.inner.num_rows
+
+    @property
+    def num_cols(self) -> int:
+        return self.inner.num_cols

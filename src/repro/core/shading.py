@@ -30,6 +30,7 @@ from repro.core.lp import (OPTIMAL, LPResult, WarmStart, fill_warm_basis,
                            solve_lp_np)
 from repro.core.neighbor import neighbor_sampling
 from repro.core.paql import PackageQuery
+from repro.core.relation import gather_column
 
 FALLBACK_SEED = 64   # LP-infeasible layer: seed with top-k by objective
 
@@ -55,12 +56,15 @@ def map_warm_basis(hier: Hierarchy, l: int, S_l: np.ndarray,
         return None
     n_prev, n_next = len(S_l), len(S_next)
     m = len(res.y)
+    S_next = np.asarray(S_next, np.int64)
     parent = part.gid[S_next]                    # parent group per candidate
     order = np.argsort(parent, kind="stable")
     parent_sorted = parent[order]
 
     attr = obj_attr if obj_attr in hier.attrs else hier.attrs[0]
-    obj_next = np.asarray(hier.layers[l - 1].table[attr], np.float64)
+    # candidate-only gathers: layer l-1 may be a streamed layer-0 relation,
+    # so only the S_next rows are ever materialised
+    obj_next_S = gather_column(hier.layers[l - 1].table, attr, S_next)
     obj_prev = np.asarray(hier.layers[l].table[attr], np.float64)
 
     new_basis = np.full(m, -1, np.int64)
@@ -74,7 +78,7 @@ def map_warm_basis(hier: Hierarchy, l: int, S_l: np.ndarray,
         if hi > lo:                              # children present in S_next
             cand = order[lo:hi]
             new_basis[k] = int(cand[np.argmin(
-                np.abs(obj_next[S_next[cand]] - obj_prev[g]))])
+                np.abs(obj_next_S[cand] - obj_prev[g]))])
     new_basis = fill_warm_basis(new_basis, n_next, m)
     if new_basis is None:
         return None
@@ -159,7 +163,7 @@ class PSStats:
 
 
 def progressive_shading(hier: Hierarchy, query: PackageQuery,
-                        table: Dict[str, np.ndarray], *,
+                        table, *,
                         alpha: Optional[int] = None,
                         dr_q: int = 500,
                         rng: Optional[np.random.Generator] = None,

@@ -21,20 +21,38 @@ from repro.core.dual_reducer import PackageResult
 from repro.core.paql import PackageQuery
 
 
-def sketch_refine(query: PackageQuery, table: Dict[str, np.ndarray],
-                  attrs, *, tau_frac: float = 0.001,
+def sketch_refine(query: PackageQuery, table, attrs, *,
+                  tau_frac: float = 0.001,
                   ilp_kwargs: Optional[dict] = None,
-                  backend: str = "kdtree") -> PackageResult:
+                  backend: str = "kdtree",
+                  memory_rows: Optional[int] = None,
+                  chunk_rows: Optional[int] = None) -> PackageResult:
     """SketchRefine over any registered partitioner backend (the paper's
     baseline uses KD-tree; ``backend="dlv"`` gives Stochastic-SketchRefine
-    style cheap re-partitioning on DLV groups)."""
+    style cheap re-partitioning on DLV groups).  ``table`` may be a dict
+    of arrays or a Relation: a streamed relation is partitioned through
+    the out-of-core bucketing backend and the refine loop gathers only
+    each step's fixed tuples + one group's members."""
+    from repro.core.relation import as_relation
+
     ilp_kwargs = dict(ilp_kwargs or {})
-    X = np.stack([np.asarray(table[a], np.float64) for a in attrs], axis=1)
-    n = X.shape[0]
+    rel = as_relation(table, columns=list(attrs))
+    n = rel.num_rows
     tau = max(2, int(tau_frac * n))
-    part = partitioner.fit(X, backend=backend,
-                           **({"tau": tau} if backend == "kdtree"
-                              else {"d_f": tau}))
+    if rel.in_memory:
+        X = np.stack([np.asarray(rel[a], np.float64) for a in attrs],
+                     axis=1)
+        part = partitioner.fit(X, backend=backend,
+                               **({"tau": tau} if backend == "kdtree"
+                                  else {"d_f": tau}))
+    else:
+        kw = {"d_f": tau}
+        if memory_rows is not None:
+            kw["memory_rows"] = memory_rows
+        if chunk_rows is not None:
+            kw["chunk_rows"] = chunk_rows
+        part = partitioner.fit(rel.chunk_source(list(attrs), chunk_rows),
+                               backend="bucketing", **kw)
     col = {a: part.reps[:, i] for i, a in enumerate(attrs)}
     sizes = part.counts.astype(np.float64)
 
@@ -64,11 +82,13 @@ def sketch_refine(query: PackageQuery, table: Dict[str, np.ndarray],
         rem_groups[g] = 0.0
         rg = np.flatnonzero(rem_groups > 0.5)
         nf, ng, nr = len(fixed_idx), len(members), len(rg)
-        cols = {a: np.concatenate([
-            np.asarray(table[a], np.float64)[np.asarray(fixed_idx, int)]
-            if nf else np.zeros(0),
-            np.asarray(table[a], np.float64)[members],
-            col[a][rg]]) for a in query_attrs(query, table)}
+        attrs_q = query_attrs(query, table)
+        fixed_view = rel.gather_rows(np.asarray(fixed_idx, np.int64),
+                                     attrs_q) if nf else \
+            {a: np.zeros(0) for a in attrs_q}
+        mem_view = rel.gather_rows(members, attrs_q)
+        cols = {a: np.concatenate([fixed_view[a], mem_view[a],
+                                   col[a][rg]]) for a in attrs_q}
         c2, A2, bl2, bu2, _ = query.matrices(cols, None)
         lb2 = np.concatenate([np.asarray(fixed_mult, np.float64) if nf
                               else np.zeros(0), np.zeros(ng + nr)])

@@ -1,0 +1,151 @@
+"""Out-of-core pipeline: end-to-end solve parity between a memmap-backed
+and a dict-backed relation, candidate-resident accounting, streamed
+hierarchy construction, and the append fast path."""
+import numpy as np
+import pytest
+
+from repro.core import relation as relation_mod
+from repro.core.engine import PackageQueryEngine
+from repro.core.hierarchy import Hierarchy
+from repro.core.paql import Constraint, PackageQuery
+from repro.core.relation import MemmapRelation
+
+N = 24_000
+ATTRS = ["v", "w"]
+ILP_KW = dict(max_nodes=100, time_limit_s=10)
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(7)
+    return {"v": rng.normal(10, 2, N), "w": rng.uniform(0.5, 2.0, N)}
+
+
+@pytest.fixture(scope="module")
+def rel(tmp_path_factory, table):
+    path = str(tmp_path_factory.mktemp("ooc") / "rel.npy")
+    np.save(path, np.stack([table[a] for a in ATTRS], axis=1))
+    return MemmapRelation.from_npy(path, ATTRS, chunk_rows=4000)
+
+
+@pytest.fixture(scope="module")
+def query():
+    return PackageQuery("v", maximize=True,
+                        constraints=(Constraint(None, 5, 15),
+                                     Constraint("w", hi=20.0)))
+
+
+def _engine(source, **kw):
+    return PackageQueryEngine(source, ATTRS, d_f=20, alpha=1500, seed=0,
+                              memory_rows=6000, chunk_rows=3000, **kw)
+
+
+def test_streamed_relation_rejects_array_only_backend(rel):
+    with pytest.raises(TypeError, match="cannot consume a streamed"):
+        Hierarchy(rel, ATTRS, d_f=20, alpha=1500, backend="kdtree")
+
+
+def test_streamed_hierarchy_never_materialises_layer0(rel):
+    hier = Hierarchy(rel, ATTRS, d_f=20, alpha=1500,
+                     memory_rows=6000, chunk_rows=3000)
+    assert hier.layers[0].X is None           # streamed layer 0
+    assert hier.layers[0].size == N
+    assert hier.L >= 1
+    assert hier.layers[1].size < N
+    # split-tree descent agrees with the stored gids on random probes
+    rng = np.random.default_rng(1)
+    idx = rng.choice(N, 200, replace=False)
+    T = rel.gather_matrix(np.sort(idx), ATTRS)
+    got = hier.get_group_batch(1, T)
+    np.testing.assert_array_equal(got, hier.layers[1].part.gid[np.sort(idx)])
+
+
+def test_solve_parity_memmap_vs_dict(table, rel, query):
+    """Same data, same per-layer backends (bucketing at layer 0, dlv
+    above), same seeds: the memmap-backed and dict-backed engines return
+    the SAME package."""
+    e_mem = _engine(table, layer0_backend="bucketing")
+    e_ooc = _engine(rel)           # bucketing is the out-of-core default
+    r_mem = e_mem.solve(query, ilp_kwargs=ILP_KW)
+    r_ooc = e_ooc.solve(query, ilp_kwargs=ILP_KW)
+    assert r_mem.feasible and r_ooc.feasible
+    assert r_ooc.obj == pytest.approx(r_mem.obj, rel=1e-12)
+    np.testing.assert_array_equal(r_mem.idx, r_ooc.idx)
+    np.testing.assert_array_equal(r_mem.mult, r_ooc.mult)
+    assert query.check_package(rel, r_ooc.idx, r_ooc.mult)
+
+
+def test_solve_stays_candidate_resident(rel, query):
+    eng = _engine(rel)
+    eng.partition()        # build: chunk/bucket-resident + O(gap sample)
+    relation_mod.reset_peak_resident()
+    res = eng.solve(query, ilp_kwargs=ILP_KW)
+    assert res.feasible
+    peak = relation_mod.peak_resident_rows()
+    # the solve gathers candidate subsets only: O(alpha), never the relation
+    assert peak <= 2 * eng.alpha
+    assert peak < N // 2
+
+
+def test_solve_direct_streams_with_guard(table, rel, query, monkeypatch):
+    r_ooc = _engine(rel).solve_direct(query, ilp_kwargs=ILP_KW)
+    r_mem = _engine(table).solve_direct(query, ilp_kwargs=ILP_KW)
+    assert r_ooc.feasible and r_mem.feasible
+    assert r_ooc.obj == pytest.approx(r_mem.obj)
+    from repro.core import paql
+    monkeypatch.setattr(paql, "FULL_MATRIX_BUDGET_BYTES", 1024)
+    with pytest.raises(ValueError, match="engine.solve"):
+        _engine(rel).solve_direct(query)
+
+
+def test_sketchrefine_over_memmap(table, rel, query):
+    res = _engine(rel).solve_sketchrefine(query, ilp_kwargs=ILP_KW)
+    if res.feasible:                       # SR may legitimately fail
+        assert query.check_package(rel, res.idx, res.mult)
+
+
+# ------------------------------------------------------------- appends
+
+
+def test_append_lands_in_rebuild_groups(table):
+    """Appended copies of existing tuples land in exactly the group a full
+    (deterministic) rebuild assigns those tuples."""
+    hier = Hierarchy(table, ATTRS, d_f=20, alpha=1500)
+    rebuild = Hierarchy(table, ATTRS, d_f=20, alpha=1500)
+    X = np.stack([table[a] for a in ATTRS], axis=1)
+    idx = np.random.default_rng(3).choice(N, 300, replace=False)
+    rep = hier.append(X[idx])
+    np.testing.assert_array_equal(rep.gids,
+                                  rebuild.layers[1].part.gid[idx])
+    assert hier.leaf_counts.sum() == N + 300
+    base = rebuild.layers[1].part.counts
+    grown = hier.leaf_counts - base
+    np.testing.assert_array_equal(
+        grown, np.bincount(rep.gids, minlength=len(base)))
+
+
+def test_append_flags_variance_crossing_leaves(table):
+    hier = Hierarchy(table, ATTRS, d_f=20, alpha=1500)
+    X = np.stack([table[a] for a in ATTRS], axis=1)
+    # a wide blob centered on one tuple blows up its leaf's variance
+    rng = np.random.default_rng(4)
+    blob = X[100] + rng.normal(0, 8.0, (4000, 2))
+    rep = hier.append(blob)
+    assert len(rep.flagged) > 0
+    assert rep.tv_bar > 0
+    # flagged leaves really did cross the bar
+    st = hier._append_state
+    nz = np.maximum(st["cnt"], 1.0)[:, None]
+    var = np.maximum(st["s2"] / nz - (st["s1"] / nz) ** 2, 0.0)
+    tv = st["cnt"] * var.max(axis=1)
+    assert np.all(tv[rep.flagged] > rep.tv_bar)
+
+
+def test_append_over_streamed_relation(rel):
+    hier = Hierarchy(rel, ATTRS, d_f=20, alpha=1500,
+                     memory_rows=6000, chunk_rows=3000)
+    rows = rel.gather_matrix(np.arange(50), ATTRS)
+    rep = hier.append(rows)             # moments init streams the relation
+    np.testing.assert_array_equal(rep.gids,
+                                  hier.layers[1].part.gid[:50])
+    assert hier.leaf_counts.sum() == N + 50

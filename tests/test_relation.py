@@ -1,0 +1,197 @@
+"""Relation abstraction: chunked scans, sorted-index gathers, lazy
+columns, and the query-path integration (matrices / validation) that keeps
+out-of-core solves candidate-resident."""
+import numpy as np
+import pytest
+
+from repro.core.bucketing import ArraySource
+from repro.core.paql import Constraint, PackageQuery
+from repro.core.relation import (ArrayRelation, CountingSource, LazyColumn,
+                                 MemmapRelation, SourceRelation, as_relation,
+                                 gather_column)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    n = 5000
+    table = {
+        "v": rng.normal(10, 2, n),
+        "w": rng.uniform(0.5, 2.0, n),
+        "ok": (rng.random(n) < 0.5).astype(np.float64),
+    }
+    X = np.stack([table["v"], table["w"], table["ok"]], axis=1)
+    return table, X
+
+
+@pytest.fixture(scope="module")
+def mm_rel(tmp_path_factory, data):
+    _, X = data
+    path = str(tmp_path_factory.mktemp("rel") / "rel.npy")
+    np.save(path, X)
+    return MemmapRelation.from_npy(path, ["v", "w", "ok"], chunk_rows=700)
+
+
+def test_array_relation_is_zero_copy_dict_adapter(data):
+    table, _ = data
+    rel = ArrayRelation(table)
+    assert rel.in_memory and rel.num_rows == len(table["v"])
+    assert rel["v"] is table["v"]            # raw column, no copy
+    assert "w" in rel and "nope" not in rel
+    view = rel.gather_rows(np.array([3, 1, 4]), ("v", "w"))
+    np.testing.assert_array_equal(view["v"], table["v"][[3, 1, 4]])
+
+
+@pytest.mark.parametrize("names", [None, ("w", "v")])
+def test_chunks_cover_relation_in_order(data, mm_rel, names):
+    table, X = data
+    got = np.concatenate(list(mm_rel.chunks(names, 700)))
+    cols = names or ("v", "w", "ok")
+    want = np.stack([table[nm] for nm in cols], axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gather_rows_restores_caller_order(data, mm_rel):
+    table, _ = data
+    rng = np.random.default_rng(1)
+    idx = rng.choice(mm_rel.num_rows, 300, replace=True)  # unsorted, dupes
+    view = mm_rel.gather_rows(idx, ("v", "ok"))
+    np.testing.assert_array_equal(view["v"], table["v"][idx])
+    np.testing.assert_array_equal(view["ok"], table["ok"][idx])
+
+
+def test_source_relation_generic_gather_matches_memmap(data, mm_rel):
+    _, X = data
+    rel = SourceRelation(ArraySource(X), ["v", "w", "ok"], chunk_rows=700)
+    idx = np.array([4999, 0, 700, 699, 701, 0])
+    a = rel.gather_rows(idx, ("v", "w"))
+    b = mm_rel.gather_rows(idx, ("v", "w"))
+    np.testing.assert_array_equal(a["v"], b["v"])
+    np.testing.assert_array_equal(a["w"], b["w"])
+
+
+def test_gather_rows_out_of_range_raises(mm_rel):
+    with pytest.raises(IndexError):
+        mm_rel.chunk_source()  # touch nothing yet
+        SourceRelation(ArraySource(np.zeros((10, 3))), ["v", "w", "ok"]) \
+            .gather_rows(np.array([11]))
+    with pytest.raises(IndexError):
+        SourceRelation(ArraySource(np.zeros((10, 3))), ["v", "w", "ok"]) \
+            .gather_rows(np.array([-1]))
+
+
+def test_lazy_column_gathers_but_never_materialises(data, mm_rel):
+    table, _ = data
+    col = mm_rel["v"]
+    assert isinstance(col, LazyColumn)
+    assert len(col) == mm_rel.num_rows
+    np.testing.assert_array_equal(col[np.array([5, 2, 5])],
+                                  table["v"][[5, 2, 5]])
+    assert col[7] == pytest.approx(table["v"][7])
+    with pytest.raises(RuntimeError, match="refusing to materialise"):
+        np.asarray(col)
+
+
+def test_boolean_mask_selects_rows(data, mm_rel):
+    """Boolean masks behave like the dict-column idiom, not 0/1 ids."""
+    table, _ = data
+    mask = table["ok"] > 0
+    np.testing.assert_array_equal(mm_rel["v"][mask], table["v"][mask])
+    view = mm_rel.gather_rows(mask, ("v",))
+    np.testing.assert_array_equal(view["v"], table["v"][mask])
+    np.testing.assert_array_equal(gather_column(mm_rel, "v", mask),
+                                  gather_column(table, "v", mask))
+    with pytest.raises(IndexError, match="boolean mask"):
+        mm_rel.gather_rows(mask[:10], ("v",))
+
+
+def test_memmap_gather_rejects_negative_ids(mm_rel):
+    """Negative ids raise instead of silently wrapping to the tail."""
+    with pytest.raises(IndexError, match="negative"):
+        mm_rel.gather_rows(np.array([3, -1]), ("v",))
+    with pytest.raises(IndexError):
+        mm_rel.gather_rows(np.array([mm_rel.num_rows]), ("v",))
+
+
+def test_gather_column_uniform_helper(data, mm_rel):
+    table, _ = data
+    idx = np.array([10, 3, 3, 4998])
+    np.testing.assert_array_equal(gather_column(table, "w", idx),
+                                  table["w"][idx])
+    np.testing.assert_array_equal(gather_column(mm_rel, "w", idx),
+                                  table["w"][idx])
+
+
+def test_as_relation_coercions(data, mm_rel):
+    table, X = data
+    assert as_relation(mm_rel) is mm_rel
+    assert isinstance(as_relation(table), ArrayRelation)
+    r = as_relation(ArraySource(X), columns=["v", "w", "ok"])
+    assert isinstance(r, MemmapRelation)      # 2-D array source fast path
+    with pytest.raises(ValueError):
+        as_relation(CountingSource(ArraySource(X)))  # needs column names
+
+
+def test_reduce_columns_streams(mm_rel, data):
+    table, _ = data
+    hi = mm_rel.reduce_columns(("v", "w"), lambda c: c.max(axis=0),
+                               np.maximum)
+    np.testing.assert_allclose(hi, [table["v"].max(), table["w"].max()])
+
+
+# ------------------------------------------------ query-path integration
+
+
+@pytest.fixture(scope="module")
+def query():
+    return PackageQuery("v", maximize=True,
+                        constraints=(Constraint(None, 5, 15),
+                                     Constraint("w", hi=20.0),
+                                     Constraint("w", lo=0.0,
+                                                avg_target=1.8)),
+                        predicate_attr="ok")
+
+
+def test_matrices_subset_parity_dict_vs_relation(data, mm_rel, query):
+    table, _ = data
+    idx = np.random.default_rng(2).choice(5000, 400, replace=False)
+    got = query.matrices(mm_rel, idx)
+    want = query.matrices(table, idx)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w)
+
+
+def test_matrices_full_streamed_parity(data, mm_rel, query):
+    got = query.matrices(mm_rel, None)
+    want = query.matrices(data[0], None)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w)
+
+
+def test_matrices_full_size_guard(mm_rel, query, monkeypatch):
+    from repro.core import paql
+    monkeypatch.setattr(paql, "FULL_MATRIX_BUDGET_BYTES", 1024)
+    with pytest.raises(ValueError, match="size guard|engine.solve|budget"):
+        query.matrices(mm_rel, None)
+
+
+def test_check_package_and_objective_stream(data, mm_rel, query):
+    table, _ = data
+    ok_rows = np.flatnonzero(table["ok"] > 0)
+    idx = ok_rows[np.argsort(-table["v"][ok_rows])[:10]]
+    mult = np.ones(10)
+    assert query.check_package(mm_rel, idx, mult) == \
+        query.check_package(table, idx, mult)
+    assert query.objective_value(mm_rel, idx, mult) == \
+        pytest.approx(query.objective_value(table, idx, mult))
+
+
+def test_counting_source_counts_passes(data):
+    _, X = data
+    src = CountingSource(ArraySource(X))
+    for _ in src.chunks(700):
+        pass
+    for _ in src.chunks(700):
+        pass
+    assert src.passes == 2
+    assert src.rows_read == 2 * len(X)
