@@ -1,14 +1,37 @@
 """Paper Fig. 9 (+ App. F.1 Fig. 11): false infeasibility as hardness
 increases.  Ground truth = direct solver run in pure-feasibility mode
-(objective dropped), the paper's Gurobi protocol."""
+(objective dropped), the paper's Gurobi protocol.
+
+Also the Solve Guard robustness bench (``--smoke`` / ``--full``):
+
+* false-infeasibility on tight queries, guarded (degradation ladder on)
+  vs unguarded — the guarded rate must be no worse;
+* deterministic fault scenarios (``repro.runtime.faults``): every
+  ``engine.solve`` under injection must return a report with a defined
+  status — zero uncaught exceptions — and the fallback rate is recorded.
+
+Results land in ``BENCH_robustness.json`` at the repo root.
+"""
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+from pathlib import Path
 
 import numpy as np
 
 from benchmarks.common import ILP_KW, build_engine, emit, query_for, timed
+from repro.core import guard
+from repro.core.engine import PackageQueryEngine
+from repro.core.hardness import TEMPLATES, column_stats, instantiate
 from repro.core.paql import PackageQuery
+from repro.core.relation import MemmapRelation, configure_retries
+from repro.data.synth_tables import make_table
+from repro.runtime import faults
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / \
+    "BENCH_robustness.json"
 
 
 def _feasibility_query(q: PackageQuery) -> PackageQuery:
@@ -38,3 +61,170 @@ def run(full: bool = False):
                 sr_ok += int(sr.feasible)
             emit(f"fig9/{tmpl}/h{h}", t_total / trials * 1e6,
                  f"ground_truth={truth}/{trials};ps={ps_ok};sr={sr_ok}")
+
+
+# ------------------------------------------------------- robustness bench
+
+ATTRS = {"tpch": ["price", "quantity", "discount", "tax"],
+         "sdss": ["tmass_prox", "j", "h", "k"]}
+
+FAULT_SCENARIOS = (
+    ("chunk_read_flaky", faults.CHUNK_READ, dict(times=3)),
+    ("gather_flaky", faults.GATHER_READ, dict(times=None, prob=0.25)),
+    ("binv_corruption", faults.BINV, dict(times=3, after=1, scale=1e-3)),
+    ("shard_death", faults.SHARD, dict(times=1)),
+)
+
+
+def _memmap_engine(kind: str, n: int, seed: int):
+    """Out-of-core engine so the read-fault sites sit on the solve path."""
+    attrs = ATTRS[kind]
+    t = make_table(kind, n, seed=seed)
+    X = np.stack([np.asarray(t[a], np.float64) for a in attrs], axis=1)
+    rel = MemmapRelation(X, attrs, chunk_rows=max(n // 7, 64))
+    eng = PackageQueryEngine(rel, attrs, d_f=10, alpha=max(n // 10, 200),
+                             seed=seed)
+    stats = column_stats(t, attrs)
+    return eng, stats
+
+
+def _shard_death_trial(trial: int):
+    """Kill a shard mid-pivot-loop in solve_lp_dist; success = the
+    single-host fallback recovers the numpy twin's optimum."""
+    import jax
+
+    from repro.core.distributed import solve_lp_dist
+    from repro.core.lp import OPTIMAL, solve_lp_np
+
+    rng = np.random.default_rng(trial)
+    m, n = 6, 160
+    c = rng.normal(size=n)
+    A = rng.normal(size=(m, n))
+    ub = rng.integers(1, 4, size=n).astype(float)
+    act = A @ (rng.uniform(0, 1, n) * ub)
+    width = np.abs(rng.normal(size=m)) * 2
+    bl = act - width * rng.uniform(0, 1, m)
+    bu = act + width * rng.uniform(0, 1, m)
+    ref = solve_lp_np(c, A, bl, bu, ub)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with faults.injected(seed=trial,
+                         arms={faults.SHARD: dict(times=1)}) as inj:
+        res = solve_lp_dist(c, A, bl, bu, ub, mesh=mesh)
+    fell_back = any("single_host_fallback" in note for note in res.notes)
+    ok = (res.status == ref.status == OPTIMAL
+          and abs(res.obj - ref.obj) <= 1e-6 * (1 + abs(ref.obj)))
+    return ok, fell_back, inj.fire_count(faults.SHARD)
+
+
+def run_robustness(full: bool = False) -> dict:
+    """Guarded-vs-unguarded false infeasibility + fault-scenario sweep."""
+    configure_retries(base_s=1e-3, max_s=1e-2)
+    n = 15_000 if full else 4_000
+    trials = 4 if full else 2
+    hardnesses = (9, 11, 13) if full else (9, 13)
+    templates = (("tpch", "Q2_TPCH"), ("tpch", "Q4_TPCH"))
+
+    # ---- false infeasibility: the ladder must not cost feasibility ----
+    gt_feas = guarded_feas = unguarded_feas = cases = 0
+    uncaught = 0
+    for kind, tmpl in templates:
+        for h in hardnesses:
+            for trial in range(trials):
+                eng, stats = _memmap_engine(kind, n, seed=100 + trial)
+                eng.partition()
+                q = instantiate(TEMPLATES[tmpl], stats, h)
+                gt = eng.solve_direct(_feasibility_query(q), ILP_KW)
+                res_g = eng.solve(q, ilp_kwargs=ILP_KW)
+                try:
+                    res_u = eng.solve(q, ilp_kwargs=ILP_KW, guarded=False)
+                    u_feas = res_u.feasible
+                except Exception:
+                    uncaught += 1
+                    u_feas = False
+                cases += 1
+                gt_feas += int(gt.feasible)
+                guarded_feas += int(res_g.feasible)
+                unguarded_feas += int(u_feas)
+    false_inf_guarded = (gt_feas - guarded_feas) / max(cases, 1)
+    false_inf_unguarded = (gt_feas - unguarded_feas) / max(cases, 1)
+    emit("robustness/false_infeasibility", 0.0,
+         f"guarded={false_inf_guarded:.3f};"
+         f"unguarded={false_inf_unguarded:.3f};cases={cases}")
+
+    # ---- fault scenarios: defined status, zero uncaught exceptions ----
+    scenarios = {}
+    for name, site, arm in FAULT_SCENARIOS:
+        fired = fallbacks = feasible = errors = 0
+        statuses = []
+        for trial in range(trials):
+            if site == faults.SHARD:
+                # the dead-shard site sits in solve_lp_dist (the engine's
+                # host loop is numpy): drive it directly on a host mesh
+                ok, fb, k = _shard_death_trial(trial)
+                fired += k
+                fallbacks += int(fb)
+                feasible += int(ok)
+                statuses.append("ok" if ok else "error")
+                continue
+            eng, stats = _memmap_engine("tpch", n, seed=200 + trial)
+            q = instantiate(TEMPLATES["Q2_TPCH"], stats, 5.0)
+            try:
+                with faults.injected(seed=trial, arms={site: arm}) as inj:
+                    eng.partition()   # chunk reads live here: retried
+                    res = eng.solve(q, ilp_kwargs=ILP_KW)
+                report = res.report
+                assert report is not None and \
+                    report.status in guard.STATUSES
+            except Exception:
+                uncaught += 1
+                continue
+            fired += inj.fire_count(site)
+            fallbacks += int(bool(report.fallbacks)
+                             or report.fault_retries > 0)
+            feasible += int(res.feasible)
+            errors += int(report.status == guard.ERROR)
+            statuses.append(report.status)
+        scenarios[name] = dict(fired=fired, trials=trials,
+                               fallback_rate=fallbacks / trials,
+                               feasible=feasible, errors=errors,
+                               statuses=statuses)
+        emit(f"robustness/fault/{name}", 0.0,
+             f"fired={fired};fallback_rate={fallbacks / trials:.2f};"
+             f"feasible={feasible}/{trials}")
+
+    entry = dict(
+        n=n, trials=trials, hardnesses=list(hardnesses), cases=cases,
+        false_infeasibility=dict(guarded=false_inf_guarded,
+                                 unguarded=false_inf_unguarded),
+        fault_scenarios=scenarios, uncaught_exceptions=uncaught,
+    )
+    data = {}
+    if BENCH_PATH.exists():
+        data = json.loads(BENCH_PATH.read_text())
+    data["full" if full else "smoke"] = entry
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"# wrote {BENCH_PATH}", flush=True)
+
+    # the acceptance gates of the robustness issue
+    assert uncaught == 0, f"{uncaught} uncaught exceptions under faults"
+    assert false_inf_guarded <= false_inf_unguarded + 1e-9, \
+        "degradation ladder increased false infeasibility"
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast robustness profile (CI gate)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale robustness sweep")
+    ap.add_argument("--fig9", action="store_true",
+                    help="also run the Fig. 9 false-infeasibility sweep")
+    args = ap.parse_args()
+    run_robustness(full=args.full and not args.smoke)
+    if args.fig9:
+        run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

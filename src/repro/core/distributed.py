@@ -347,21 +347,33 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
                   max_iters: int = 5000, tol: float = 1e-7,
                   warm_start=None, refactor_every: int = None,
                   num_buckets: int = NUM_BUCKETS,
-                  gather_k: int = GATHER_K):
+                  gather_k: int = GATHER_K,
+                  budget=None, monitor=None):
     """Revised dual simplex with DISTRIBUTED pricing (the ``mesh=`` path
     of ``repro.core.lp.solve_lp``).
 
     Same conventions and pivot rules as ``solve_lp_np`` — including the
-    warm-start contract — but the per-column state (A, maintained reduced
-    costs d, bounds, nonbasic position codes) lives sharded across
-    ``mesh``'s data axes and stays device-resident across pivots, while
-    the m x m basis state (Binv, y, xB, basis) is replicated on the host.
-    Per pivot: one ``pq_step`` (pricing + exact BFRT, O(mn/p) compute,
-    O(num_buckets + p*K + m) collective traffic) and one ``update_step``
-    (the O(n/p) d-axpy + bookkeeping, no collectives).
+    warm-start and budget/monitor contracts — but the per-column state
+    (A, maintained reduced costs d, bounds, nonbasic position codes)
+    lives sharded across ``mesh``'s data axes and stays device-resident
+    across pivots, while the m x m basis state (Binv, y, xB, basis) is
+    replicated on the host.  Per pivot: one ``pq_step`` (pricing + exact
+    BFRT, O(mn/p) compute, O(num_buckets + p*K + m) collective traffic)
+    and one ``update_step`` (the O(n/p) d-axpy + bookkeeping, no
+    collectives).
+
+    Resilience: a shard failure (any exception out of the mesh loop,
+    including the ``dist.shard`` fault-injection site) or a degenerate
+    stall past ``stall_bland`` (Bland mode is host-side only) falls back
+    to ``solve_lp_np`` on a single host, warm-started from the basis
+    snapshot at the point of failure, with the same budget — noted as
+    ``single_host_fallback`` in ``LPResult.notes``.
     """
-    from repro.core.lp import (INFEASIBLE, ITER_LIMIT, OPTIMAL, LPResult,
-                               REFACTOR_EVERY, _prep)
+    from repro.core.guard import THETA_EPS, NumericalMonitor
+    from repro.core.lp import (BUDGET, INFEASIBLE, ITER_LIMIT, OPTIMAL,
+                               LPResult, REFACTOR_EVERY, _prep,
+                               solve_lp_np)
+    from repro.runtime import faults
     if refactor_every is None:
         refactor_every = REFACTOR_EVERY
     arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start,
@@ -373,7 +385,11 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
         res.pivot_stats = {"exact": 0, "conservative": 0}
         return res
     cf, A, l, u = arrs
-    basis0, at_upper0, winit = start
+    basis0, at_upper0, winit, wnote = start
+    notes = [] if wnote is None else [wnote]
+    mon = monitor if monitor is not None else NumericalMonitor()
+    if budget is not None:
+        budget.start()
     axes = _mesh_axes(mesh)
     p = int(np.prod([mesh.shape[a] for a in axes]))
     Npad = -(-N // p) * p
@@ -426,68 +442,112 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
 
     status = ITER_LIMIT
     iters = 0
+    stall = 0
     n_exact = n_cons = 0
-    with mesh:
-        for iters in range(1, max_iters + 1):
-            if since >= refactor_every:
-                refresh()
-            lB, uB = l[basis], u[basis]
-            viol_lo = lB - xB
-            viol_hi = xB - uB
-            viol = np.maximum(viol_lo, viol_hi)
-            r = int(np.argmax(viol))
-            if viol[r] <= tol and since > 0:
-                refresh()
+    fallback_reason = None
+    try:
+        with mesh:
+            for iters in range(1, max_iters + 1):
+                if budget is not None and (
+                        budget.out_of_time()
+                        or iters > budget.remaining_pivots()):
+                    status = BUDGET
+                    notes.append(f"budget: truncated at pivot {iters - 1}")
+                    break
+                if since >= refactor_every:
+                    refresh()
+                lB, uB = l[basis], u[basis]
                 viol_lo = lB - xB
                 viol_hi = xB - uB
                 viol = np.maximum(viol_lo, viol_hi)
                 r = int(np.argmax(viol))
-            if viol[r] <= tol:
-                status = OPTIMAL
-                break
-            above = bool(viol_hi[r] >= viol_lo[r])
-            delta = xB[r] - (uB[r] if above else lB[r])
-            s = 1.0 if delta > 0 else -1.0
+                if viol[r] <= tol and since > 0:
+                    refresh()
+                    viol_lo = lB - xB
+                    viol_hi = xB - uB
+                    viol = np.maximum(viol_lo, viol_hi)
+                    r = int(np.argmax(viol))
+                if viol[r] <= tol:
+                    status = OPTIMAL
+                    break
+                above = bool(viol_hi[r] >= viol_lo[r])
+                delta = xB[r] - (uB[r] if above else lB[r])
+                s = 1.0 if delta > 0 else -1.0
 
-            rho = jnp.asarray(Binv[r])
-            (alpha_dev, flip_dev, r_best, q, d_q, at_up_q, Acol, fvec,
-             n_flips, has_cross, exact) = pq_step(
-                A_dev, d_dev, l_dev, u_dev, state_dev, rho,
-                jnp.asarray(s), jnp.asarray(abs(delta)))
-            if not bool(has_cross):
-                if since > 0:       # could be drift: retry on fresh factors
-                    refresh()
-                    continue
-                status = INFEASIBLE
-                break
-            q = int(q)
-            w = Binv @ np.asarray(Acol)
-            if abs(w[r]) < 1e-11:
-                if since > 0:
-                    refresh()
-                    continue
-                break               # cannot happen on fresh factors
-            n_exact += int(bool(exact))
-            n_cons += int(not bool(exact))
-            leave = int(basis[r])
-            # flip absorption: xB -= Binv @ (A[:, flips] @ dx)
-            xB = xB - Binv @ np.asarray(fvec)
-            target = uB[r] if above else lB[r]
-            t = (xB[r] - target) / w[r]
-            xq = u[q] if bool(at_up_q) else l[q]
-            xB = xB - t * w
-            xB[r] = xq + t
-            theta = float(d_q) / w[r]
-            y = y + theta * Binv[r]
-            Binv_r = Binv[r] / w[r]
-            Binv = Binv - np.outer(w, Binv_r)
-            Binv[r] = Binv_r
-            basis[r] = q
-            d_dev, state_dev = update_step(
-                d_dev, state_dev, alpha_dev, flip_dev, jnp.asarray(theta),
-                jnp.asarray(q, jnp.int64), jnp.asarray(leave, jnp.int64),
-                jnp.asarray(above))
-            since += 1
+                faults.maybe_raise(faults.SHARD, RuntimeError)
+                rho = jnp.asarray(Binv[r])
+                (alpha_dev, flip_dev, r_best, q, d_q, at_up_q, Acol, fvec,
+                 n_flips, has_cross, exact) = pq_step(
+                    A_dev, d_dev, l_dev, u_dev, state_dev, rho,
+                    jnp.asarray(s), jnp.asarray(abs(delta)))
+                if not bool(has_cross):
+                    if since > 0:   # could be drift: retry on fresh factors
+                        refresh()
+                        continue
+                    status = INFEASIBLE
+                    break
+                q = int(q)
+                w = Binv @ np.asarray(Acol)
+                if abs(w[r]) < 1e-11:
+                    if since > 0:
+                        refresh()
+                        continue
+                    break           # cannot happen on fresh factors
+                n_exact += int(bool(exact))
+                n_cons += int(not bool(exact))
+                leave = int(basis[r])
+                # flip absorption: xB -= Binv @ (A[:, flips] @ dx)
+                xB = xB - Binv @ np.asarray(fvec)
+                target = uB[r] if above else lB[r]
+                t = (xB[r] - target) / w[r]
+                xq = u[q] if bool(at_up_q) else l[q]
+                xB = xB - t * w
+                xB[r] = xq + t
+                theta = float(d_q) / w[r]
+                y = y + theta * Binv[r]
+                Binv_r = Binv[r] / w[r]
+                Binv = Binv - np.outer(w, Binv_r)
+                Binv[r] = Binv_r
+                basis[r] = q
+                d_dev, state_dev = update_step(
+                    d_dev, state_dev, alpha_dev, flip_dev,
+                    jnp.asarray(theta), jnp.asarray(q, jnp.int64),
+                    jnp.asarray(leave, jnp.int64), jnp.asarray(above))
+                since += 1
+                # anti-cycling: degenerate streaks force a refactorize;
+                # past stall_bland, fall back to the host twin (which has
+                # the Bland's-rule mode; selection here is in-kernel)
+                if abs(theta) <= THETA_EPS:
+                    stall += 1
+                    if stall == mon.stall_refactor:
+                        mon.stall_refactors += 1
+                        mon.stall_events += 1
+                        since = refactor_every
+                    if stall >= mon.stall_bland:
+                        mon.stall_events += 1
+                        fallback_reason = (f"{stall} degenerate pivots "
+                                           "(Bland mode is host-side)")
+                        break
+                else:
+                    stall = 0
+    except Exception as e:          # dead shard / collective failure
+        fallback_reason = f"{type(e).__name__}: {e}"
+
+    if budget is not None:
+        budget.charge_pivots(iters)
+
+    if fallback_reason is not None:
+        # single-host fallback, warm-started from the failure-point basis
+        state_np = np.asarray(state_dev)[:N]
+        notes.append(f"single_host_fallback: {fallback_reason}")
+        res = solve_lp_np(c, A_t, bl, bu, ub, lb=lb, max_iters=max_iters,
+                          tol=tol, warm_start=(basis.copy(),
+                                               state_np == 1),
+                          budget=budget, monitor=monitor)
+        res.notes = tuple(notes) + res.notes
+        res.pivot_stats = {"exact": n_exact, "conservative": n_cons,
+                           "fallback": 1}
+        return res
 
     # final answer always from a fresh factorization (twin parity)
     state_np = np.asarray(state_dev)[:N]
@@ -504,7 +564,7 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
     y = Binv.T @ cf[basis]
     obj_min = float(cf @ np.where(np.isfinite(x), x, 0.0))
     res = LPResult(status, x[:n], obj_min, iters, basis.copy(),
-                   at_upper.copy(), y * scale)
+                   at_upper.copy(), y * scale, notes=tuple(notes))
     res.pivot_stats = {"exact": n_exact, "conservative": n_cons}
     return res
 

@@ -36,6 +36,7 @@ class PackageResult:
     fallbacks: int = 0
     sub_ilp_size: int = 0
     status: str = ""
+    report: Optional[object] = None   # guard.SolveReport (engine.solve)
 
     def integrality_gap(self, eps: float = 0.1) -> float:
         """Paper §4.1 metric vs. this result's own LP bound."""
@@ -66,23 +67,53 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
                  rng: Optional[np.random.Generator] = None,
                  max_lp_iters: int = 20000,
                  ilp_kwargs: Optional[dict] = None,
-                 aux: str = "lp", warm_start=None) -> PackageResult:
+                 aux: str = "lp", warm_start=None,
+                 budget=None, report=None,
+                 ladder: bool = True) -> PackageResult:
     """aux: 'lp' (paper's auxiliary LP, line 4-5) | 'random' (Mini-Exp 4
     ablation: random sample of ~q tuples instead).  warm_start seeds the
     first LP (see module docstring).  ``table`` may be a dict of arrays or
     a Relation: only the <= |S| candidate rows are ever gathered (the
-    out-of-core contract — S carries tuple ids, never tuples)."""
+    out-of-core contract — S carries tuple ids, never tuples).
+
+    Guard integration: ``budget`` (guard.SolveBudget) is threaded through
+    every LP and the sub-ILPs; ``report`` (guard.SolveReport) accumulates
+    LP stats and degradation rungs.  With ``ladder=True`` (default) a
+    failed solve degrades instead of failing dry:
+
+      * lp1 INFEASIBLE      -> one warm retry with relaxed tolerance
+        (rung ``dr_relax_tol``);
+      * sub-ILP out of budget / infeasible with no widening left ->
+        round-and-repair lp1's relaxation over the full candidate set
+        (``_swap_search``) and return it flagged ``degraded_rounded``.
+    """
     rng = rng or np.random.default_rng(0)
     ilp_kwargs = dict(ilp_kwargs or {})
+    monitor = report.monitor if report is not None else None
     S = np.asarray(S)
     n = len(S)
     c, A, bl, bu, ub = query.matrices(table, S)
 
     lp1 = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters,
-                      warm_start=warm_start)
+                      warm_start=warm_start, budget=budget,
+                      monitor=monitor)
+    if report is not None:
+        report.absorb_lp(lp1)
+    if lp1.status == INFEASIBLE and ladder:
+        # tight queries can be declared infeasible by a hair: retry warm
+        # with a relaxed tolerance before giving up (ladder rung 1)
+        lp1 = solve_lp_np(c, A, bl, bu, ub, max_iters=max_lp_iters,
+                          tol=1e-5, warm_start=lp1, budget=budget,
+                          monitor=monitor)
+        if report is not None:
+            report.rung("dr_relax_tol",
+                        detail=f"retry status={lp1.status}")
+            report.absorb_lp(lp1)
     if lp1.status != OPTIMAL:
+        status = "lp_budget" if lp1.status == ilp_mod.BUDGET \
+            else "lp_infeasible"
         return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
-                             0.0, 0.0, status="lp_infeasible")
+                             0.0, 0.0, status=status)
     lp_obj_query = -lp1.obj if query.maximize else lp1.obj
 
     tol = 1e-9
@@ -94,10 +125,25 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
         ub_aux = np.minimum(ub, max(E / max(q, 1), 1e-9))
         # same c/A, only tighter upper bounds: textbook dual warm start
         lp2 = solve_lp_np(c, A, bl, bu, ub_aux, max_iters=max_lp_iters,
-                          warm_start=lp1)
+                          warm_start=lp1, budget=budget, monitor=monitor)
+        if report is not None:
+            report.absorb_lp(lp2)
         if lp2.status == OPTIMAL:
             support |= lp2.x > tol
     sel = np.flatnonzero(support)
+
+    def _degraded_rounding(n_sel: int, fallbacks: int, why: str):
+        """Terminal ladder rung: round-and-repair lp1's relaxation."""
+        xr, objr = ilp_mod._swap_search(lp1.x, c, A, bl, bu, np.zeros(n),
+                                        ub, 1e-6)
+        if xr is None:
+            return None
+        if report is not None:
+            report.rung("degraded_rounded", degrades=True, detail=why)
+        nz = xr > 0.5
+        obj_query = -objr if query.maximize else objr
+        return PackageResult(True, S[nz], xr[nz], obj_query, lp_obj_query,
+                             fallbacks, n_sel, status="degraded_rounded")
 
     fallbacks = 0
     while True:
@@ -105,7 +151,10 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
         cs, As, _, _, ubs = query.matrices(table, sub)
         res = ilp_mod.solve_ilp(cs, As, bl, bu, ubs,
                                 warm_start=_subset_warm(lp1, sel, n),
+                                budget=budget, monitor=monitor,
                                 **ilp_kwargs)
+        if report is not None:
+            report.ilp_nodes += res.nodes
         if res.feasible:
             mult = res.x
             nz = mult > 0.5
@@ -113,10 +162,19 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
             return PackageResult(True, sub[nz], mult[nz], obj_query,
                                  lp_obj_query, fallbacks, len(sel),
                                  status="ok")
-        if len(sel) >= n:
+        out_of_budget = budget is not None and budget.exhausted()
+        if len(sel) >= n or out_of_budget:
+            if ladder:
+                why = "budget exhausted" if out_of_budget else \
+                    "sub-ILP infeasible at full width"
+                deg = _degraded_rounding(len(sel), fallbacks, why)
+                if deg is not None:
+                    return deg
+            status = "budget_exhausted" if out_of_budget \
+                and len(sel) < n else "ilp_infeasible"
             return PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
                                  0.0, lp_obj_query, fallbacks, len(sel),
-                                 status="ilp_infeasible")
+                                 status=status)
         # fallback: double q, sample additional tuples uniformly (lines 9-14)
         fallbacks += 1
         q = min(2 * max(q, 1), n)

@@ -24,12 +24,13 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import guard
 from repro.core import ilp as ilp_mod
 from repro.core.dual_reducer import PackageResult, dual_reducer
 from repro.core.hierarchy import Hierarchy
 from repro.core.lp import OPTIMAL, solve_lp_np
 from repro.core.paql import PackageQuery
-from repro.core.relation import Relation, as_relation
+from repro.core.relation import Relation, as_relation, io_retry_count
 from repro.core.shading import progressive_shading
 from repro.core.sketchrefine import sketch_refine
 
@@ -73,16 +74,43 @@ class PackageQueryEngine:
     # ------------------------------------------------------------ solvers
     def solve(self, query: PackageQuery, *, dr_q: int = 500,
               ilp_kwargs: Optional[dict] = None,
+              budget: Optional[guard.SolveBudget] = None,
+              guarded: bool = True,
               **ps_kwargs) -> PackageResult:
         """Progressive Shading (the paper's algorithm).  Extra kwargs are
         the ablation knobs of progressive_shading (layer_solver, sampler,
-        dr_aux)."""
+        dr_aux).
+
+        Guarded by default: every call returns a PackageResult carrying a
+        ``guard.SolveReport`` (``res.report``) with a defined status —
+        ok / degraded / infeasible / budget_exhausted / error — and never
+        raises; ``budget=`` (a ``guard.SolveBudget``) bounds the whole
+        cascade end to end.  ``guarded=False`` disables the degradation
+        ladder and re-raises exceptions (the unguarded baseline for the
+        robustness bench)."""
         if self.hierarchy is None:
             self.partition()
         t0 = time.time()
-        res = progressive_shading(self.hierarchy, query, self.table,
-                                  alpha=self.alpha, dr_q=dr_q, rng=self.rng,
-                                  ilp_kwargs=ilp_kwargs, **ps_kwargs)
+        report = guard.SolveReport(budget=budget or guard.SolveBudget(),
+                                   monitor=guard.NumericalMonitor())
+        report.budget.start()
+        io0 = io_retry_count()
+        try:
+            res = progressive_shading(self.hierarchy, query, self.table,
+                                      alpha=self.alpha, dr_q=dr_q,
+                                      rng=self.rng, ilp_kwargs=ilp_kwargs,
+                                      budget=report.budget, report=report,
+                                      ladder=guarded, **ps_kwargs)
+        except Exception as e:
+            if not guarded:
+                raise
+            # guard contract: never raise — contain, report, return empty
+            report.status = guard.ERROR
+            report.note(f"error: {type(e).__name__}: {e}")
+            res = PackageResult(False, np.zeros(0, np.int64), np.zeros(0),
+                                0.0, 0.0, status="error")
+        report.fault_retries = io_retry_count() - io0
+        res.report = report.finalize(res.feasible)
         res.status += f" t={time.time() - t0:.3f}s"
         return res
 

@@ -25,7 +25,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.lp import solve_lp_np, OPTIMAL, INFEASIBLE
+from repro.core.lp import solve_lp_np, BUDGET, OPTIMAL, INFEASIBLE
 
 ILP_OPTIMAL, ILP_FEASIBLE, ILP_INFEASIBLE, ILP_LIMIT = 0, 1, 2, 3
 
@@ -53,7 +53,7 @@ def _round_feasible(x, c, A, bl, bu, lb, ub, tol):
 
 
 def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400,
-          warm_start=None):
+          warm_start=None, budget=None):
     """LP-guided fractional diving.
 
     Package-query LPs have at most m fractional (basic) variables, so
@@ -66,7 +66,7 @@ def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400,
     warm = warm_start
     for _ in range(max_steps):
         res = solve_lp_np(c, A, bl, bu, ubd, lb=lbd, max_iters=max_lp_iters,
-                          warm_start=warm)
+                          warm_start=warm, budget=budget)
         if res.status != OPTIMAL:
             return None, np.inf
         warm = res
@@ -160,7 +160,8 @@ def _swap_search(x0, c, A, bl, bu, lb, ub, tol, *, max_moves=200):
 
 
 def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
-                      max_rounds=120, seed=0, warm_start=None):
+                      max_rounds=120, seed=0, warm_start=None,
+                      budget=None):
     """Objective feasibility pump (Fischetti-Glover-Lodi) for the tight
     BETWEEN-window packages where rounding/diving stall.
 
@@ -172,7 +173,7 @@ def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
     n = len(c)
     cn = c / (np.linalg.norm(c) + 1e-12)
     res = solve_lp_np(c, A, bl, bu, ub, lb=lb, max_iters=max_lp_iters,
-                      warm_start=warm_start)
+                      warm_start=warm_start, budget=budget)
     if res.status != OPTIMAL:
         return None, np.inf
     x_tilde = np.clip(np.round(res.x), lb, ub)
@@ -189,7 +190,8 @@ def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
         # previous pump LP's basis (not its at_upper pattern, which the
         # engine re-derives from the new reduced costs) carries over.
         res = solve_lp_np(c_dist + w * cn, A, bl, bu, ub, lb=lb,
-                          max_iters=max_lp_iters, warm_start=res)
+                          max_iters=max_lp_iters, warm_start=res,
+                          budget=budget)
         if res.status != OPTIMAL:
             return None, np.inf
         new_tilde = np.clip(np.round(res.x), lb, ub)
@@ -212,8 +214,16 @@ def _feasibility_pump(c, A, bl, bu, lb, ub, tol, max_lp_iters,
 def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
               max_nodes: int = 5000, tol: float = 1e-6,
               time_limit_s: float = 60.0, max_lp_iters: int = 8000,
-              warm_start=None, warm_nodes: bool = True) -> ILPResult:
-    """warm_nodes=False disables node-LP warm starting (benchmark knob)."""
+              warm_start=None, warm_nodes: bool = True,
+              budget=None, monitor=None) -> ILPResult:
+    """warm_nodes=False disables node-LP warm starting (benchmark knob).
+
+    ``budget=`` (a ``guard.SolveBudget``) clamps the node/time limits to
+    what remains, charges every explored node against the shared node
+    budget, and threads the pivot budget through the root/node/heuristic
+    LPs — a budget-exhausted search returns ILP_LIMIT (with the incumbent
+    if one exists) instead of running past the deadline.
+    """
     c = np.asarray(c, np.float64)
     A = np.atleast_2d(np.asarray(A, np.float64))
     m, n = A.shape
@@ -222,13 +232,34 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     ub0 = np.asarray(ub, np.float64)
     lb0 = np.zeros(n) if lb is None else np.asarray(lb, np.float64)
 
+    if budget is not None:
+        budget.start()
+        kw = budget.clamp_ilp_kwargs(dict(time_limit_s=time_limit_s,
+                                          max_nodes=max_nodes))
+        time_limit_s = kw["time_limit_s"]
+        max_nodes = kw["max_nodes"]
+
     root = solve_lp_np(c, A, bl, bu, ub0, lb=lb0, max_iters=max_lp_iters,
-                       warm_start=warm_start)
+                       warm_start=warm_start, budget=budget,
+                       monitor=monitor)
     lp_iters = root.iters
     if root.status == INFEASIBLE:
         return ILPResult(ILP_INFEASIBLE, np.zeros(n), np.inf, 1, np.inf,
                          lp_iters)
     root_obj = root.obj
+    if root.status == BUDGET:
+        # truncated root relaxation: salvage an incumbent by rounding the
+        # (possibly primal-infeasible) iterate, skip the search
+        best_x, best_obj = _round_feasible(root.x, c, A, bl, bu, lb0, ub0,
+                                           tol)
+        if best_x is None:
+            best_x, best_obj = _swap_search(root.x, c, A, bl, bu, lb0,
+                                            ub0, tol)
+        if best_x is None:
+            return ILPResult(ILP_LIMIT, np.zeros(n), np.inf, 0, root_obj,
+                             lp_iters)
+        return ILPResult(ILP_FEASIBLE, best_x, best_obj, 0, root_obj,
+                         lp_iters)
 
     best_x, best_obj = _round_feasible(root.x, c, A, bl, bu, lb0, ub0, tol)
     if best_x is None:
@@ -248,10 +279,12 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                 break
     if best_x is None:
         best_x, best_obj = _dive(c, A, bl, bu, lb0, ub0, tol, max_lp_iters,
-                                 max_steps=4 * m + 8, warm_start=root)
+                                 max_steps=4 * m + 8, warm_start=root,
+                                 budget=budget)
     if best_x is None:
         best_x, best_obj = _feasibility_pump(c, A, bl, bu, lb0, ub0, tol,
-                                             max_lp_iters, warm_start=root)
+                                             max_lp_iters, warm_start=root,
+                                             budget=budget)
     if best_x is not None:
         bx, bo = _swap_search(best_x, c, A, bl, bu, lb0, ub0, tol)
         if bx is not None and bo < best_obj:
@@ -265,13 +298,16 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     t0 = time.time()
     status = ILP_OPTIMAL
     while heap:
-        if nodes >= max_nodes or (time.time() - t0) > time_limit_s:
+        if nodes >= max_nodes or (time.time() - t0) > time_limit_s or \
+                (budget is not None and budget.exhausted()):
             status = ILP_LIMIT
             break
         bound, _, lbn, ubn, xlp, node_warm = heapq.heappop(heap)
         if bound >= best_obj - 1e-9:
             continue
         nodes += 1
+        if budget is not None:
+            budget.charge_nodes(1)
         frac = np.abs(xlp - np.round(xlp))
         j = int(np.argmax(frac))
         if frac[j] < tol:
@@ -291,9 +327,15 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
             # warm-start the dual simplex from the parent's basis
             res = solve_lp_np(c, A, bl, bu, ub2, lb=lb2,
                               max_iters=max_lp_iters,
-                              warm_start=node_warm if warm_nodes else None)
+                              warm_start=node_warm if warm_nodes else None,
+                              budget=budget, monitor=monitor)
             lp_iters += res.iters
             if res.status == INFEASIBLE:
+                continue
+            if res.status == BUDGET:
+                # child bound is unusable and the budget is gone: the
+                # search is incomplete, never claim optimality
+                status = ILP_LIMIT
                 continue
             if res.obj >= best_obj - 1e-9:
                 continue

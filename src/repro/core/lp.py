@@ -63,7 +63,11 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-OPTIMAL, ITER_LIMIT, INFEASIBLE = 0, 1, 2
+from repro.core.guard import (DRIFT_TOL, NumericalMonitor, STALL_BLAND,
+                              STALL_REFACTOR, SolveBudget, THETA_EPS)
+from repro.runtime import faults
+
+OPTIMAL, ITER_LIMIT, INFEASIBLE, BUDGET = 0, 1, 2, 3
 _TOL = 1e-9
 REFACTOR_EVERY = 64   # pivots between full refactorizations (f64 stability)
 
@@ -77,6 +81,8 @@ class LPResult:
     basis: np.ndarray        # final basis (indices into n+m)
     at_upper: np.ndarray     # nonbasic-at-upper flags (n+m)
     y: np.ndarray            # duals (m,)
+    notes: Tuple[str, ...] = ()   # solver events (warm rejection, stalls,
+                                  # budget truncation) for the SolveReport
 
     @property
     def feasible(self) -> bool:
@@ -135,7 +141,7 @@ def _cold_start(cf, l, n, N):
 
 def _warm_state(cf, A, l, u, warm_basis, at_upper_hint, tol):
     """Validate a warm basis; returns
-    (basis, in_basis, at_upper, Binv, y, d) or None.
+    ((basis, in_basis, at_upper, Binv, y, d), None) or (None, reason).
 
     Dual feasibility is restored for free by placing every nonbasic column
     at the bound matching the sign of its reduced cost; the ``at_upper``
@@ -143,19 +149,24 @@ def _warm_state(cf, A, l, u, warm_basis, at_upper_hint, tol):
     which preserves the warm solve's primal point.  The factors computed
     for validation (Binv, y, d) are returned so the solver can seed its
     state without refactorizing again.
+
+    A rejected basis is never an error — the caller falls back to the
+    cold all-slack start — but it is no longer *silent*: the reason is
+    surfaced through ``LPResult.notes`` / the SolveReport so a bad basis
+    can never be proceeded on unnoticed.
     """
     m, N = A.shape
     basis = np.asarray(warm_basis, np.int64).ravel()
     if basis.shape != (m,):
-        return None
+        return None, f"basis shape {basis.shape} != ({m},)"
     if basis.min() < 0 or basis.max() >= N or len(np.unique(basis)) != m:
-        return None
+        return None, "basis indices out of range or duplicated"
     try:
         Binv = np.linalg.inv(A[:, basis])
     except np.linalg.LinAlgError:
-        return None
+        return None, "singular basis"
     if not np.all(np.isfinite(Binv)) or np.abs(Binv).max() > 1e12:
-        return None
+        return None, "ill-conditioned basis"
     in_basis = np.zeros(N, bool)
     in_basis[basis] = True
     y = Binv.T @ cf[basis]
@@ -175,9 +186,9 @@ def _warm_state(cf, A, l, u, warm_basis, at_upper_hint, tol):
                          | ((d > tol) & np.isinf(l))
                          | (np.isinf(l) & np.isinf(u)))
     if np.any(bad):
-        return None
+        return None, "dual-infeasible column pinned at an infinite bound"
     at_upper[in_basis] = False
-    return basis.copy(), in_basis, at_upper, Binv, y, d
+    return (basis.copy(), in_basis, at_upper, Binv, y, d), None
 
 
 def fill_warm_basis(new_basis, n_new: int, m: int):
@@ -201,9 +212,10 @@ def fill_warm_basis(new_basis, n_new: int, m: int):
 def _prep(c, A_t, bl, bu, ub, lb, warm_start, tol=1e-7):
     """Shared solver setup: scale, standard form, warm-basis validation.
 
-    Returns (arrs, scale, m, n, (basis0, at_upper0, winit)) where arrs is
-    None for an infeasible box and winit is the validated warm state
-    (basis, in_basis, at_upper, Binv, y, d) or None for a cold start.
+    Returns (arrs, scale, m, n, (basis0, at_upper0, winit, wnote)) where
+    arrs is None for an infeasible box, winit is the validated warm state
+    (basis, in_basis, at_upper, Binv, y, d) or None for a cold start, and
+    wnote records why a requested warm basis was rejected (else None).
     """
     c = np.asarray(c, np.float64)
     A_t = np.atleast_2d(np.asarray(A_t, np.float64))
@@ -219,23 +231,36 @@ def _prep(c, A_t, bl, bu, ub, lb, warm_start, tol=1e-7):
     if np.any(l > u + tol):
         return None, scale, m, n, None
     wb, wh = _unpack_warm(warm_start)
-    winit = _warm_state(cf, A, l, u, wb, wh, tol) if wb is not None else None
+    winit, wnote = (None, None) if wb is None else \
+        _warm_state(cf, A, l, u, wb, wh, tol)
+    if wnote is not None:
+        wnote = f"warm_start_rejected: {wnote}; cold start used"
     if winit is None:
         basis0, _, at_upper0 = _cold_start(cf, l, n, N)
     else:
         basis0, _, at_upper0 = winit[:3]
-    return (cf, A, l, u), scale, m, n, (basis0, at_upper0, winit)
+    return (cf, A, l, u), scale, m, n, (basis0, at_upper0, winit, wnote)
 
 
 def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                 max_iters: int = 5000, tol: float = 1e-7,
                 warm_start=None,
-                refactor_every: int = REFACTOR_EVERY) -> LPResult:
+                refactor_every: int = REFACTOR_EVERY,
+                budget: Optional[SolveBudget] = None,
+                monitor: Optional[NumericalMonitor] = None) -> LPResult:
     """Bounded revised dual simplex with BFRT (numpy twin).
 
     Maintains Binv (rank-1 product-form updates), reduced costs d (one
     O(n) axpy per pivot) and xB (O(m*|flips|)) incrementally; the pricing
     matvec ``rho @ A`` is the only O(mn) work per iteration.
+
+    ``budget=`` bounds wall clock and pivots (status BUDGET on
+    truncation); ``monitor=`` collects numerical-health events.  The
+    solver checks Binv residual drift every ``monitor.drift_check_every``
+    pivots and tracks degenerate-pivot streaks: a streak of
+    ``stall_refactor`` forces a refactorization, ``stall_bland``
+    escalates to Bland's-rule pivoting (smallest-index row/column, no
+    bound flips) until a non-degenerate pivot resumes progress.
     """
     arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start,
                                      tol)
@@ -244,7 +269,11 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
         return LPResult(INFEASIBLE, np.zeros(n), 0.0, 0,
                         np.arange(n, N), np.zeros(N, bool), np.zeros(m))
     cf, A, l, u = arrs
-    basis0, at_upper0, winit = start
+    basis0, at_upper0, winit, wnote = start
+    notes = [] if wnote is None else [wnote]
+    mon = monitor if monitor is not None else NumericalMonitor()
+    if budget is not None:
+        budget.start()
     basis = basis0.copy()
     at_upper = at_upper0.copy()
     in_basis = np.zeros(N, bool)
@@ -276,9 +305,24 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
 
     status = ITER_LIMIT
     iters = 0
+    stall = 0
+    bland = False
     for iters in range(1, max_iters + 1):
+        if budget is not None and (budget.out_of_time()
+                                   or iters > budget.remaining_pivots()):
+            status = BUDGET
+            notes.append(f"budget: truncated at pivot {iters - 1}")
+            break
         if since >= refactor_every:
             refresh()
+        Binv = faults.perturb(faults.BINV, Binv)
+        if iters % mon.drift_check_every == 0:
+            resid = float(np.abs(Binv @ A[:, basis] - np.eye(m)).max())
+            if mon.record_resid(resid):
+                if mon.drift_refactors <= 3:
+                    notes.append(f"drift: |BinvB-I|={resid:.2e} -> "
+                                 "refactorize")
+                refresh()
         lB, uB = l[basis], u[basis]
         viol_lo = lB - xB
         viol_hi = xB - uB
@@ -295,6 +339,11 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
         if viol[r] <= tol:
             status = OPTIMAL
             break
+        if bland:
+            # Bland anti-cycling: leave the violated row whose BASIC
+            # VARIABLE index is smallest — row position alone does not
+            # carry the finiteness guarantee (bases reorder across pivots)
+            r = int(np.argmin(np.where(viol > tol, basis, N)))
         above = viol_hi[r] >= viol_lo[r]
         delta = xB[r] - (uB[r] if above else lB[r])
         s = 1.0 if delta > 0 else -1.0
@@ -314,25 +363,33 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
         ratio = np.where(elig, d / np.where(np.abs(sa) > tol, sa, 1.0), np.inf)
         ratio = np.where(elig, np.maximum(ratio, 0.0), np.inf)
 
-        # ---- BFRT: walk breakpoints in ratio order, flipping bounds while
-        # the remaining infeasibility budget allows (App. C.3).
-        width = u - l
-        flip_cost = np.full(N, np.inf)
-        flip_cost[elig] = np.abs(alpha[elig]) * width[elig]
-        order = np.argsort(ratio, kind="stable")
-        k_elig = int(np.sum(elig))
-        cand = order[:k_elig]
-        csum = np.cumsum(flip_cost[cand])
-        budget = abs(delta)
-        cross = int(np.searchsorted(csum, budget - 1e-12))
-        if cross >= k_elig:
-            if since > 0:         # dual unbounded on stale factors: re-check
-                refresh()
-                continue
-            status = INFEASIBLE   # dual unbounded: flips cannot absorb
-            break
-        q = int(cand[cross])
-        flips = cand[:cross]
+        if bland:
+            # Bland's rule: smallest-index min-ratio column, no bound
+            # flips — finite (anti-cycling) at the cost of progress/pivot
+            rmin = float(np.min(ratio))
+            q = int(np.argmax(elig & (ratio <= rmin + 1e-12)))
+            flips = np.empty(0, np.int64)
+            mon.bland_pivots += 1
+        else:
+            # ---- BFRT: walk breakpoints in ratio order, flipping bounds
+            # while the remaining infeasibility budget allows (App. C.3).
+            width = u - l
+            flip_cost = np.full(N, np.inf)
+            flip_cost[elig] = np.abs(alpha[elig]) * width[elig]
+            order = np.argsort(ratio, kind="stable")
+            k_elig = int(np.sum(elig))
+            cand = order[:k_elig]
+            csum = np.cumsum(flip_cost[cand])
+            flip_budget = abs(delta)
+            cross = int(np.searchsorted(csum, flip_budget - 1e-12))
+            if cross >= k_elig:
+                if since > 0:     # dual unbounded on stale factors: re-check
+                    refresh()
+                    continue
+                status = INFEASIBLE   # dual unbounded: flips cannot absorb
+                break
+            q = int(cand[cross])
+            flips = cand[:cross]
 
         # ---- incremental pivot (no inv, no full d recompute) ----
         leave = basis[r]
@@ -372,6 +429,24 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
         basis[r] = q
         since += 1
 
+        # ---- anti-cycling: degenerate (theta ~ 0) pivot streaks ----
+        if abs(theta) <= THETA_EPS:
+            stall += 1
+            if stall == mon.stall_refactor:
+                mon.stall_refactors += 1
+                mon.stall_events += 1
+                since = refactor_every          # force refresh next pivot
+            if stall >= mon.stall_bland and not bland:
+                bland = True
+                mon.stall_events += 1
+                notes.append(f"stall: {stall} degenerate pivots -> "
+                             "Bland's rule")
+        elif stall:
+            stall = 0
+            bland = False                       # progress resumed
+
+    if budget is not None:
+        budget.charge_pivots(iters)
     # final answer always from a fresh factorization
     Binv = np.linalg.inv(A[:, basis])
     xN = np.where(in_basis, 0.0, np.where(at_upper, u, l))
@@ -382,7 +457,8 @@ def solve_lp_np(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     y = Binv.T @ cf[basis]
     obj_min = float(cf @ np.where(np.isfinite(x), x, 0.0))
     return LPResult(status, x[:n], obj_min, iters, basis.copy(),
-                    at_upper.copy(), y * scale)   # duals in original units
+                    at_upper.copy(), y * scale,   # duals in original units
+                    notes=tuple(notes))
 
 
 # ----------------------------------------------------------------- JAX twin
@@ -417,8 +493,8 @@ def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
         return (status == ITER_LIMIT) & (it < max_iters)
 
     def body(state):
-        (basis, in_basis, at_upper, Binv, xB, d, y, status, it,
-         since) = state
+        (basis, in_basis, at_upper, Binv, xB, d, y, stall, bland, n_bland,
+         n_drift, status, it, since) = state
 
         # NOTE: refresh branches take the factor state as an explicit
         # operand (not via closure): lax.cond caches branch jaxprs by
@@ -427,8 +503,15 @@ def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
         def do_ref(ops):
             return refreshed(basis, in_basis, at_upper) + (jnp.int32(0),)
 
+        # numerical-health check: residual drift of the rank-1-updated
+        # inverse forces an immediate refactorization (m is tiny, so the
+        # m×m residual costs nothing next to the O(mn) pricing pass)
+        resid = jnp.abs(Binv @ A[:, basis]
+                        - jnp.eye(m, dtype=A.dtype)).max()
+        drift = (resid > DRIFT_TOL) & (since > 0)
+        n_drift = n_drift + drift.astype(jnp.int32)
         Binv, xB, d, y, since = jax.lax.cond(
-            since >= refactor_every, do_ref, lambda ops: ops,
+            drift | (since >= refactor_every), do_ref, lambda ops: ops,
             (Binv, xB, d, y, since))
         lB, uB = l[basis], u[basis]
         viol = jnp.maximum(lB - xB, xB - uB)
@@ -439,8 +522,12 @@ def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
         viol_lo = lB - xB
         viol_hi = xB - uB
         viol = jnp.maximum(viol_lo, viol_hi)
-        r = jnp.argmax(viol)
-        done = viol[r] <= tol
+        r_max = jnp.argmax(viol)
+        done = viol[r_max] <= tol
+        # Bland mode: violated row with the smallest BASIC VARIABLE index
+        # (row position alone does not carry the finiteness guarantee)
+        r_bland = jnp.argmin(jnp.where(viol > tol, basis, N))
+        r = jnp.where(bland, r_bland, r_max)
 
         above = viol_hi[r] >= viol_lo[r]
         delta = jnp.where(above, xB[r] - uB[r], xB[r] - lB[r])
@@ -460,16 +547,19 @@ def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
 
         order = jnp.argsort(ratio)
         csum_all = jnp.cumsum(flip_cost[order])
-        budget = jnp.abs(delta)
+        flip_budget = jnp.abs(delta)
         elig_sorted = elig[order]
-        crossed = (csum_all >= budget - 1e-12) & elig_sorted
+        crossed = (csum_all >= flip_budget - 1e-12) & elig_sorted
         cross_pos = jnp.argmax(crossed)          # first True (0 if none)
-        has_cross = jnp.any(crossed)
-        q = order[cross_pos]
+        # Bland mode: smallest-index min-ratio column, no bound flips
+        rmin = jnp.min(ratio)
+        q_bland = jnp.argmax(elig & (ratio <= rmin + 1e-12))
+        has_cross = jnp.any(crossed) | (bland & any_elig)
+        q = jnp.where(bland, q_bland, order[cross_pos])
         # only flip breakpoints strictly before the crossing in sorted order
         rank = jnp.empty(N, jnp.int32).at[order].set(
             jnp.arange(N, dtype=jnp.int32))
-        flip_mask = elig & (rank < rank[q])
+        flip_mask = elig & (rank < rank[q]) & ~bland
 
         stale = since > 0
         w = Binv @ A[:, q]
@@ -515,28 +605,48 @@ def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
         since = jnp.where(do_pivot, since + 1,
                           jnp.where((no_pivot | unsafe) & stale,
                                     jnp.int32(refactor_every), since))
-        return (basis, in_basis, at_upper, Binv, xB, d, y, new_status,
-                (it + 1).astype(jnp.int32), since.astype(jnp.int32))
+
+        # ---- anti-cycling: degenerate (theta ~ 0) pivot streaks ----
+        degen = do_pivot & (jnp.abs(theta) <= THETA_EPS)
+        progress = do_pivot & (jnp.abs(theta) > THETA_EPS)
+        n_bland = n_bland + (bland & do_pivot).astype(jnp.int32)
+        stall = jnp.where(progress, 0,
+                          jnp.where(degen, stall + 1, stall))
+        bland = jnp.where(progress, False,
+                          bland | (stall >= STALL_BLAND))
+        since = jnp.where(degen & (stall == STALL_REFACTOR),
+                          jnp.int32(refactor_every), since)
+        return (basis, in_basis, at_upper, Binv, xB, d, y,
+                stall.astype(jnp.int32), bland, n_bland, n_drift,
+                new_status, (it + 1).astype(jnp.int32),
+                since.astype(jnp.int32))
 
     state = (basis0, in_basis0, at_upper0, jnp.eye(m, dtype=A.dtype),
              jnp.zeros(m, A.dtype), cf, jnp.zeros(m, A.dtype),
+             jnp.int32(0), jnp.bool_(False), jnp.int32(0), jnp.int32(0),
              jnp.int32(ITER_LIMIT), jnp.int32(0),
              jnp.int32(refactor_every))  # since=K: factorize on entry
     state = jax.lax.while_loop(cond, body, state)
-    basis, in_basis, at_upper, _, _, _, _, status, it, _ = state
+    (basis, in_basis, at_upper, _, _, _, _, _, _, n_bland, n_drift,
+     status, it, _) = state
     Binv, xB, d, y = refreshed(basis, in_basis, at_upper)
     xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
     xN = xN.at[basis].set(0.0)
     x = xN.at[basis].set(xB)
     obj = cf @ jnp.where(jnp.isfinite(x), x, 0.0)
-    return status, x[:n], obj, it, basis, at_upper, y
+    return status, x[:n], obj, it, basis, at_upper, y, n_bland, n_drift
 
 
 def solve_lp(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
              max_iters: int = 5000, warm_start=None,
-             mesh=None) -> LPResult:
+             mesh=None, budget: Optional[SolveBudget] = None,
+             monitor: Optional[NumericalMonitor] = None) -> LPResult:
     """JAX revised dual simplex (jit + while_loop).  Same conventions as
-    solve_lp_np, including the warm-start contract.
+    solve_lp_np, including the warm-start and budget/monitor contracts.
+    (Wall-clock cannot be polled inside jit, so the deadline is enforced
+    between LP calls and via the pivot cap, which is rounded to a coarse
+    granularity so the jitted twin sees few distinct static ``max_iters``
+    values instead of retracing per call.)
 
     ``mesh=``: a ``jax.sharding.Mesh`` routes the solve through the
     DISTRIBUTED pricing backend (``repro.core.distributed.solve_lp_dist``):
@@ -550,20 +660,50 @@ def solve_lp(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
         from repro.core.distributed import solve_lp_dist
         return solve_lp_dist(c, A_t, bl, bu, ub, lb=lb,
                              max_iters=max_iters, warm_start=warm_start,
-                             mesh=mesh)
+                             mesh=mesh, budget=budget, monitor=monitor)
     arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start)
     if arrs is None:
         return LPResult(INFEASIBLE, np.zeros(n), 0.0, 0,
                         np.arange(n, n + m), np.zeros(n + m, bool),
                         np.zeros(m))
     cf, A, l, u = arrs
-    basis0, at_upper0, _ = start
-    status, x, obj, it, basis, at_upper, y = _solve_lp_jax(
-        jnp.asarray(cf), jnp.asarray(A), jnp.asarray(l), jnp.asarray(u),
-        jnp.asarray(basis0), jnp.asarray(at_upper0), max_iters)
-    return LPResult(int(status), np.asarray(x), float(obj), int(it),
+    basis0, at_upper0, _, wnote = start
+    notes = [] if wnote is None else [wnote]
+    cap = max_iters
+    if budget is not None:
+        budget.start()
+        if budget.out_of_time() or budget.remaining_pivots() <= 0:
+            notes.append("budget: exhausted before LP solve")
+            return LPResult(BUDGET, np.zeros(n), 0.0, 0,
+                            np.asarray(basis0),
+                            np.asarray(at_upper0, bool), np.zeros(m),
+                            notes=tuple(notes))
+        cap = budget.lp_iter_cap(max_iters)
+    status, x, obj, it, basis, at_upper, y, n_bland, n_drift = \
+        _solve_lp_jax(
+            jnp.asarray(cf), jnp.asarray(A), jnp.asarray(l),
+            jnp.asarray(u), jnp.asarray(basis0), jnp.asarray(at_upper0),
+            cap)
+    status, it = int(status), int(it)
+    n_bland, n_drift = int(n_bland), int(n_drift)
+    if n_bland:
+        notes.append(f"stall: Bland's rule for {n_bland} pivots")
+    if n_drift:
+        notes.append(f"drift: {n_drift} forced refactorizations")
+    if monitor is not None:
+        monitor.bland_pivots += n_bland
+        monitor.drift_refactors += n_drift
+        if n_bland:
+            monitor.stall_events += 1
+    if budget is not None:
+        budget.charge_pivots(it)
+        if status == ITER_LIMIT and (cap < max_iters
+                                     or budget.exhausted()):
+            status = BUDGET
+            notes.append(f"budget: truncated at pivot cap {cap}")
+    return LPResult(status, np.asarray(x), float(obj), it,
                     np.asarray(basis), np.asarray(at_upper),
-                    np.asarray(y) * scale)
+                    np.asarray(y) * scale, notes=tuple(notes))
 
 
 # ------------------------------------------------------- certificate check

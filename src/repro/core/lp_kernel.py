@@ -23,8 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lp import (INFEASIBLE, ITER_LIMIT, OPTIMAL, LPResult,
-                           REFACTOR_EVERY, _prep)
+from repro.core.guard import (DRIFT_TOL, NumericalMonitor, STALL_REFACTOR,
+                              SolveBudget, THETA_EPS)
+from repro.core.lp import (BUDGET, INFEASIBLE, ITER_LIMIT, OPTIMAL,
+                           LPResult, REFACTOR_EVERY, _prep)
 from repro.kernels.bfrt import bfrt_select
 from repro.kernels.pricing import pricing
 
@@ -56,8 +58,8 @@ def _solve_lp_kernel_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
         return (status == ITER_LIMIT) & (it < max_iters)
 
     def body(state):
-        (basis, in_basis, at_upper, Binv, xB, d, y, status, it,
-         since) = state
+        (basis, in_basis, at_upper, Binv, xB, d, y, stall, n_drift,
+         status, it, since) = state
 
         # refresh branches take the factor state as an explicit operand
         # (lax.cond caches branch jaxprs by function identity; a closure
@@ -65,8 +67,15 @@ def _solve_lp_kernel_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
         def do_ref(ops):
             return refreshed(basis, in_basis, at_upper) + (jnp.int32(0),)
 
+        # Binv residual drift -> forced refactorization (guard contract;
+        # Bland escalation lives in the non-kernel twins, where the
+        # entering-column selection is host-visible)
+        resid = jnp.abs(Binv @ A[:, basis]
+                        - jnp.eye(m, dtype=A.dtype)).max()
+        drift = (resid > DRIFT_TOL) & (since > 0)
+        n_drift = n_drift + drift.astype(jnp.int32)
         Binv, xB, d, y, since = jax.lax.cond(
-            since >= refactor_every, do_ref, lambda ops: ops,
+            drift | (since >= refactor_every), do_ref, lambda ops: ops,
             (Binv, xB, d, y, since))
         lB, uB = l[basis], u[basis]
         viol = jnp.maximum(lB - xB, xB - uB)
@@ -138,29 +147,41 @@ def _solve_lp_kernel_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
         since = jnp.where(do_pivot, since + 1,
                           jnp.where((no_pivot | unsafe) & stale,
                                     jnp.int32(refactor_every), since))
-        return (basis, in_basis, at_upper, Binv, xB, d, y, new_status,
+        # degenerate-pivot streak -> forced refactorization (anti-cycling)
+        degen = do_pivot & (jnp.abs(theta) <= THETA_EPS)
+        progress = do_pivot & (jnp.abs(theta) > THETA_EPS)
+        stall = jnp.where(progress, 0,
+                          jnp.where(degen, stall + 1, stall))
+        since = jnp.where(degen & (stall == STALL_REFACTOR),
+                          jnp.int32(refactor_every), since)
+        return (basis, in_basis, at_upper, Binv, xB, d, y,
+                stall.astype(jnp.int32), n_drift, new_status,
                 (it + 1).astype(jnp.int32), since.astype(jnp.int32))
 
     state = (basis0, in_basis0, at_upper0, jnp.eye(m, dtype=A.dtype),
              jnp.zeros(m, A.dtype), cf, jnp.zeros(m, A.dtype),
+             jnp.int32(0), jnp.int32(0),
              jnp.int32(ITER_LIMIT), jnp.int32(0),
              jnp.int32(refactor_every))  # since=K: factorize on entry
     state = jax.lax.while_loop(cond, body, state)
-    basis, in_basis, at_upper, _, _, _, _, status, it, _ = state
+    (basis, in_basis, at_upper, _, _, _, _, _, n_drift, status, it,
+     _) = state
     Binv, xB, d, y = refreshed(basis, in_basis, at_upper)
     xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
     xN = xN.at[basis].set(0.0)
     x = xN.at[basis].set(xB)
     obj = cf @ jnp.where(jnp.isfinite(x), x, 0.0)
-    return status, x[:n], obj, it, basis, at_upper, y
+    return status, x[:n], obj, it, basis, at_upper, y, n_drift
 
 
 def solve_lp_kernel(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                     max_iters: int = 5000,
                     interpret: Optional[bool] = None,
-                    warm_start=None) -> LPResult:
+                    warm_start=None,
+                    budget: Optional[SolveBudget] = None,
+                    monitor: Optional[NumericalMonitor] = None) -> LPResult:
     """Kernel-backed twin of core.lp.solve_lp (same conventions, including
-    the warm-start contract)."""
+    the warm-start and budget/monitor contracts)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     arrs, scale, m, n, start = _prep(c, A_t, bl, bu, ub, lb, warm_start)
@@ -169,10 +190,32 @@ def solve_lp_kernel(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                         np.arange(n, n + m), np.zeros(n + m, bool),
                         np.zeros(m))
     cf, A, l, u = arrs
-    basis0, at_upper0, _ = start
-    status, x, obj, it, basis, at_upper, y = _solve_lp_kernel_jax(
+    basis0, at_upper0, _, wnote = start
+    notes = [] if wnote is None else [wnote]
+    cap = max_iters
+    if budget is not None:
+        budget.start()
+        if budget.out_of_time() or budget.remaining_pivots() <= 0:
+            notes.append("budget: exhausted before LP solve")
+            return LPResult(BUDGET, np.zeros(n), 0.0, 0,
+                            np.asarray(basis0),
+                            np.asarray(at_upper0, bool), np.zeros(m),
+                            notes=tuple(notes))
+        cap = budget.lp_iter_cap(max_iters)
+    status, x, obj, it, basis, at_upper, y, n_drift = _solve_lp_kernel_jax(
         jnp.asarray(cf), jnp.asarray(A), jnp.asarray(l), jnp.asarray(u),
-        jnp.asarray(basis0), jnp.asarray(at_upper0), max_iters, interpret)
-    return LPResult(int(status), np.asarray(x), float(obj), int(it),
+        jnp.asarray(basis0), jnp.asarray(at_upper0), cap, interpret)
+    status, it, n_drift = int(status), int(it), int(n_drift)
+    if n_drift:
+        notes.append(f"drift: {n_drift} forced refactorizations")
+    if monitor is not None:
+        monitor.drift_refactors += n_drift
+    if budget is not None:
+        budget.charge_pivots(it)
+        if status == ITER_LIMIT and (cap < max_iters
+                                     or budget.exhausted()):
+            status = BUDGET
+            notes.append(f"budget: truncated at pivot cap {cap}")
+    return LPResult(status, np.asarray(x), float(obj), it,
                     np.asarray(basis), np.asarray(at_upper),
-                    np.asarray(y) * scale)
+                    np.asarray(y) * scale, notes=tuple(notes))

@@ -30,13 +30,72 @@ wraps a ChunkSource and counts full streaming passes for the same purpose.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.bucketing import ArraySource, ChunkSource, MemmapSource
+from repro.runtime import faults
 
 DEFAULT_CHUNK_ROWS = 1 << 18
+
+# ------------------------------------------------------------- retried I/O
+
+# Transient read faults (flaky disk / network filesystem) are retried with
+# capped exponential backoff before they surface.  The jitter rng is
+# seeded so a replayed run sleeps the same schedule — determinism is part
+# of the failure-semantics contract (see guard / runtime.faults).
+_RETRY = {"tries": 4, "base_s": 0.02, "max_s": 1.0, "seed": 0}
+_RETRY_STATS = {"retries": 0}
+
+
+def io_retry_count() -> int:
+    """Process-wide count of transient-read retries (all relations);
+    ``engine.solve`` diffs it around a solve to fill
+    ``SolveReport.fault_retries``."""
+    return _RETRY_STATS["retries"]
+
+
+def configure_retries(*, tries: Optional[int] = None,
+                      base_s: Optional[float] = None,
+                      max_s: Optional[float] = None,
+                      seed: Optional[int] = None) -> Dict[str, float]:
+    """Tune the transient-I/O retry policy (None keeps the current value);
+    returns the policy now in force.  ``tries`` counts total attempts, so
+    ``tries=1`` disables retrying."""
+    if tries is not None:
+        _RETRY["tries"] = max(1, int(tries))
+    if base_s is not None:
+        _RETRY["base_s"] = float(base_s)
+    if max_s is not None:
+        _RETRY["max_s"] = float(max_s)
+    if seed is not None:
+        _RETRY["seed"] = int(seed)
+    return dict(_RETRY)
+
+
+def _backoff_sleep(attempt: int, rng: np.random.Generator) -> None:
+    """Sleep ``min(max_s, base_s * 2^attempt)`` scaled by seeded jitter in
+    [0.5, 1.5) — capped exponential backoff."""
+    delay = min(_RETRY["max_s"], _RETRY["base_s"] * (2.0 ** attempt))
+    time.sleep(delay * (0.5 + rng.random()))
+
+
+def _retry_io(fn, what: str):
+    """Run ``fn()``; transient ``OSError`` retries up to ``tries`` total
+    attempts with capped exponential backoff, then re-raises annotated."""
+    tries = int(_RETRY["tries"])
+    rng = np.random.default_rng(_RETRY["seed"])
+    for k in range(tries):
+        try:
+            return fn()
+        except OSError as e:
+            if k == tries - 1:
+                raise OSError(f"{what}: giving up after {tries} "
+                              f"attempts ({e})") from e
+            _RETRY_STATS["retries"] += 1
+            _backoff_sleep(k, rng)
 
 # ------------------------------------------------------ resident tracking
 
@@ -318,7 +377,12 @@ class MemmapRelation(Relation):
             np.array_equal(cj, np.arange(len(self.columns)))
         for a in range(0, self.num_rows, step):
             b = min(a + step, self.num_rows)
-            block = np.asarray(self.X[a:b], np.float64)
+
+            def _read(a=a, b=b):
+                faults.maybe_raise(faults.CHUNK_READ)
+                return np.asarray(self.X[a:b], np.float64)
+
+            block = _retry_io(_read, f"chunk read [{a}:{b})")
             note_resident(b - a)
             yield block if full else block[:, cj]
 
@@ -329,7 +393,12 @@ class MemmapRelation(Relation):
         idx = _normalize_idx(idx, self.num_rows)
         order = np.argsort(idx, kind="stable")
         rows = np.empty((len(idx), len(self.columns)), np.float64)
-        rows[order] = self.X[idx[order]]
+
+        def _read():
+            faults.maybe_raise(faults.GATHER_READ)
+            return self.X[idx[order]]
+
+        rows[order] = _retry_io(_read, f"gather of {len(idx)} rows")
         note_resident(len(idx))
         return {nm: rows[:, cj[j]] for j, nm in enumerate(names)}
 
@@ -366,13 +435,48 @@ class SourceRelation(Relation):
         return self.source.num_rows
 
     def chunks(self, names=None, chunk_rows=None) -> Iterator[np.ndarray]:
+        """Resilient scan: a transient ``OSError`` mid-stream restarts the
+        source and skips the rows already delivered (a generator that
+        raised cannot be resumed), with the same capped backoff as
+        :func:`_retry_io`; rows are yielded exactly once."""
         names = self._cols(names)
         pos = {nm: j for j, nm in enumerate(self.columns)}
         cj = np.asarray([pos[nm] for nm in names], np.int64)
         full = np.array_equal(cj, np.arange(len(self.columns)))
-        for block in self.source.chunks(chunk_rows or self.chunk_rows):
-            note_resident(len(block))
-            yield block if full else block[:, cj]
+        step = chunk_rows or self.chunk_rows
+        tries = int(_RETRY["tries"])
+        rng = np.random.default_rng(_RETRY["seed"])
+        delivered = 0
+        failures = 0
+        while True:
+            gen = self.source.chunks(step)
+            skip = delivered
+            try:
+                for block in gen:
+                    faults.maybe_raise(faults.CHUNK_READ)
+                    nb = len(block)
+                    if skip >= nb:
+                        skip -= nb
+                        continue
+                    if skip:
+                        block = block[skip:]
+                        skip = 0
+                    delivered += len(block)
+                    note_resident(len(block))
+                    yield block if full else block[:, cj]
+                return
+            except OSError as e:
+                failures += 1
+                if failures >= tries:
+                    raise OSError(f"source scan: giving up after "
+                                  f"{failures} attempts at row "
+                                  f"{delivered} ({e})") from e
+                _RETRY_STATS["retries"] += 1
+                _backoff_sleep(failures - 1, rng)
+            finally:
+                close = getattr(gen, "close", None)
+                if close is not None:
+                    close()
 
 
 # -------------------------------------------------------------- conversion

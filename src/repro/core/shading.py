@@ -26,8 +26,8 @@ import numpy as np
 
 from repro.core.dual_reducer import PackageResult, dual_reducer
 from repro.core.hierarchy import Hierarchy
-from repro.core.lp import (OPTIMAL, LPResult, WarmStart, fill_warm_basis,
-                           solve_lp_np)
+from repro.core.lp import (INFEASIBLE, OPTIMAL, LPResult, WarmStart,
+                           fill_warm_basis, solve_lp_np)
 from repro.core.neighbor import neighbor_sampling
 from repro.core.paql import PackageQuery
 from repro.core.relation import gather_column
@@ -94,7 +94,8 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
             layer_solver: str = "lp", sampler: str = "neighbor",
             rng: Optional[np.random.Generator] = None,
             warm_start=None, return_state: bool = False,
-            lp_solver=None):
+            lp_solver=None, budget=None, report=None, widen=None,
+            ladder: bool = True, skip_lp: bool = False):
     """One Shading step (Algorithm 2): layer-l candidates -> layer-(l-1).
 
     Ablation knobs (paper Mini-Experiments 1 and 2):
@@ -103,31 +104,93 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
       sampler: 'neighbor' (Algorithm 3) | 'random' (random representative
         sampling — shown much worse).
     warm_start: optional basis for the layer LP (see map_warm_basis);
-    return_state: also return the layer LPResult (None for the ilp ablation)
-      so progressive_shading can warm-start the next layer.
+    return_state: also return ``(S_next, res, S_used, s_prime)`` — the
+      layer LPResult (None for the ilp ablation), the candidate set the
+      LP actually solved over (α escalation can widen it, and the basis
+      indices only make sense against it), and the surviving support —
+      so progressive_shading can warm-start the next layer and widen on
+      failure.
     lp_solver: solve_lp_np-compatible callable for the layer LP (default
       the numpy twin; pass e.g. ``partial(solve_lp, mesh=mesh)`` to run
       the cascade through the distributed pricing backend).
+
+    Guard integration (``budget``/``report``: guard objects threaded from
+    the engine).  With ``ladder=True`` a failed layer LP degrades in
+    order instead of silently seeding: (1) warm retry at relaxed
+    tolerance, (2) re-solve over a widened candidate set (``widen(2)``,
+    α escalation — the paper's premature-discard remedy), (3) the
+    top-objective seed fallback below, each recorded as a rung.
+    ``skip_lp=True`` (budget exhausted upstream) bypasses the layer LP
+    entirely and descends via the seed path.
     """
     lp_solver = lp_solver or solve_lp_np
+    monitor = report.monitor if report is not None else None
     layer_table = hier.layers[l].table
-    c, A, bl, bu, ub = query.matrices(layer_table, S_l)
+    S_used = np.asarray(S_l)
     res: Optional[LPResult] = None
-    if layer_solver == "ilp":
+
+    def _lp(S_cols, warm, solver=None, **extra):
+        c, A, bl, bu, ub = query.matrices(layer_table, S_cols)
+        kw = dict(extra)
+        if budget is not None:
+            kw["budget"] = budget
+        if monitor is not None:
+            kw["monitor"] = monitor
+        return (solver or lp_solver)(c, A, bl, bu, ub,
+                                     max_iters=max_lp_iters,
+                                     warm_start=warm, **kw)
+
+    if skip_lp:
+        s_prime = np.zeros(0, np.int64)
+    elif layer_solver == "ilp":
         from repro.core.ilp import solve_ilp
-        res_i = solve_ilp(c, A, bl, bu, ub, max_nodes=100, time_limit_s=10)
-        s_prime = S_l[res_i.x > 1e-9] if res_i.feasible else np.zeros(0, int)
+        c, A, bl, bu, ub = query.matrices(layer_table, S_used)
+        res_i = solve_ilp(c, A, bl, bu, ub, max_nodes=100, time_limit_s=10,
+                          budget=budget, monitor=monitor)
+        s_prime = S_used[res_i.x > 1e-9] if res_i.feasible \
+            else np.zeros(0, np.int64)
     else:
-        res = lp_solver(c, A, bl, bu, ub, max_iters=max_lp_iters,
-                        warm_start=warm_start)
-        s_prime = S_l[res.x > 1e-9] if res.status == OPTIMAL \
+        res = _lp(S_used, warm_start)
+        if report is not None:
+            report.absorb_lp(res)
+        if res.status != OPTIMAL and ladder:
+            if res.status == INFEASIBLE:
+                # ladder rung 1: warm retry at relaxed tolerance (numpy
+                # twin — the only one with a tol knob)
+                retry = _lp(S_used, res, solver=solve_lp_np, tol=1e-5)
+                if report is not None:
+                    report.rung("layer_relax_tol",
+                                detail=f"layer {l}: retry "
+                                       f"status={retry.status}")
+                    report.absorb_lp(retry)
+                if retry.status == OPTIMAL:
+                    res = retry
+            if res.status != OPTIMAL and widen is not None and not (
+                    budget is not None and budget.exhausted()):
+                # ladder rung 2: α escalation — re-solve over a doubled
+                # candidate set (cold: the basis indices don't transfer)
+                S_wide = np.asarray(widen(2))
+                if len(S_wide) > len(S_used):
+                    wide_res = _lp(S_wide, None)
+                    if report is not None:
+                        report.rung("alpha_escalation",
+                                    detail=f"layer {l}: |S| "
+                                           f"{len(S_used)} -> "
+                                           f"{len(S_wide)}")
+                        report.absorb_lp(wide_res)
+                    if wide_res.status == OPTIMAL:
+                        res = wide_res
+                        S_used = S_wide
+        s_prime = S_used[res.x > 1e-9] if res.status == OPTIMAL \
             else np.zeros(0, np.int64)
     if len(s_prime) == 0:
         # representative-level solve infeasible: seed augmentation with the
         # best-objective representatives so it can still recover
-        obj = layer_table[query.objective_attr][S_l]
+        if report is not None and not skip_lp:
+            report.rung("layer_seed_fallback", detail=f"layer {l}")
+        obj = layer_table[query.objective_attr][S_used]
         order = np.argsort(-obj if query.maximize else obj, kind="stable")
-        s_prime = S_l[order[:FALLBACK_SEED]]
+        s_prime = S_used[order[:FALLBACK_SEED]]
 
     if sampler == "random":
         rng = rng or np.random.default_rng(0)
@@ -151,7 +214,7 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
         S_next = neighbor_sampling(hier, l, alpha, s_prime,
                                    query.objective_attr, query.maximize)
     if return_state:
-        return S_next, res
+        return S_next, res, S_used, s_prime
     return S_next
 
 
@@ -172,7 +235,9 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
                         sampler: str = "neighbor",
                         dr_aux: str = "lp",
                         warm_starts: bool = True,
-                        lp_solver=None
+                        lp_solver=None,
+                        budget=None, report=None,
+                        ladder: bool = True
                         ) -> PackageResult:
     """Algorithm 1: iterate Shading from layer L to 0, then Dual Reducer.
 
@@ -183,23 +248,64 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
     ``lp_solver`` routes every layer LP through an alternate
     solve_lp_np-compatible engine (e.g. the distributed pricing backend,
     ``functools.partial(solve_lp, mesh=mesh)``).
+
+    Guard integration: one ``budget`` bounds the whole cascade; once it
+    is exhausted the remaining layer LPs are skipped (``budget_descend``
+    rung, degraded quality: the cascade descends via the top-objective
+    seed + Neighbor Sampling instead of solving) so a deadline cannot be
+    blown inside a deep hierarchy.  If Dual Reducer fails and budget
+    remains, the layer-0 candidate set is rebuilt at double α from the
+    layer-1 support and Dual Reducer retried (``dr_alpha_escalation``).
     """
     t0 = time.time()
     alpha = alpha or hier.alpha
     S = np.arange(hier.layers[hier.L].size)
     sizes = [len(S)]
     warm = None
+    support = None          # previous layer's surviving support (widening)
     for l in range(hier.L, 0, -1):
-        S_next, lp_res = shading(hier, l, alpha, S, query,
-                                 layer_solver=layer_solver, sampler=sampler,
-                                 rng=rng, warm_start=warm, return_state=True,
-                                 lp_solver=lp_solver)
-        warm = map_warm_basis(hier, l, S, lp_res, S_next,
+        skip = budget is not None and budget.start().exhausted()
+        if skip and report is not None:
+            report.rung("budget_descend", degrades=True,
+                        detail=f"layer {l}: LP skipped")
+        widen = None
+        if l < hier.L and support is not None and len(support):
+            widen = (lambda f, _s=support, _l=l + 1:
+                     neighbor_sampling(hier, _l, f * alpha, _s,
+                                       query.objective_attr,
+                                       query.maximize))
+        S_next, lp_res, S_used, support = shading(
+            hier, l, alpha, S, query, layer_solver=layer_solver,
+            sampler=sampler, rng=rng, warm_start=warm, return_state=True,
+            lp_solver=lp_solver, budget=budget, report=report,
+            widen=widen, ladder=ladder, skip_lp=skip)
+        warm = map_warm_basis(hier, l, S_used, lp_res, S_next,
                               obj_attr=query.objective_attr) \
             if warm_starts else None
         S = S_next
         sizes.append(len(S))
     res = dual_reducer(query, table, S, q=dr_q, rng=rng,
-                       ilp_kwargs=ilp_kwargs, aux=dr_aux, warm_start=warm)
+                       ilp_kwargs=ilp_kwargs, aux=dr_aux, warm_start=warm,
+                       budget=budget, report=report, ladder=ladder)
+    if not res.feasible and ladder and support is not None \
+            and len(support) and not (budget is not None
+                                      and budget.exhausted()):
+        # α escalation at layer 0: rebuild the candidate set at double
+        # width from the layer-1 support and retry Dual Reducer cold —
+        # the paper's remedy for tight queries whose support was
+        # prematurely discarded upstream
+        S_wide = neighbor_sampling(hier, 1, 2 * alpha, support,
+                                   query.objective_attr, query.maximize)
+        if len(S_wide) > len(S):
+            if report is not None:
+                report.rung("dr_alpha_escalation",
+                            detail=f"|S| {len(S)} -> {len(S_wide)}")
+            res2 = dual_reducer(query, table, S_wide, q=dr_q, rng=rng,
+                                ilp_kwargs=ilp_kwargs, aux=dr_aux,
+                                budget=budget, report=report,
+                                ladder=ladder)
+            if res2.feasible:
+                res = res2
+                sizes[-1] = len(S_wide)
     res.status += f" layers={sizes}"
     return res

@@ -1,3 +1,4 @@
 from repro.runtime.coordinator import Coordinator, WorkerState
+from repro.runtime import faults
 
-__all__ = ["Coordinator", "WorkerState"]
+__all__ = ["Coordinator", "WorkerState", "faults"]

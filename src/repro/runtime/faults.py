@@ -1,0 +1,188 @@
+"""Deterministic, seed-driven fault injection for the resilience bench.
+
+Every fallback the Solve Guard promises (``core.guard``) is pinned by a
+test that *forces* the failure it handles.  This module is the forcing
+side: a process-global :class:`FaultInjector` that production code polls
+at a handful of named sites, each a single cheap call that is a no-op
+when no injector is active:
+
+* ``relation.chunk_read`` / ``relation.gather`` — raise a transient
+  ``OSError`` inside a Relation chunk/gather read (``core.relation``
+  retries with capped exponential backoff);
+* ``lp.binv``   — perturb the maintained basis inverse inside
+  ``solve_lp_np`` (forcing the NumericalMonitor drift path);
+* ``dist.shard`` — raise inside the ``solve_lp_dist`` pivot loop,
+  standing in for a dead mesh shard (forcing the single-host fallback).
+
+Determinism: firing depends only on the injector's seed and the per-site
+opportunity counter (``after`` skips, ``times`` caps, ``prob`` draws from
+the seeded rng), so a failing resilience test replays exactly.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+# ------------------------------------------------------------ site names
+
+CHUNK_READ = "relation.chunk_read"
+GATHER_READ = "relation.gather"
+BINV = "lp.binv"
+SHARD = "dist.shard"
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """When/how one site fires.
+
+    ``after`` opportunities are skipped, then up to ``times`` fires (None
+    = unlimited), each gated by ``prob`` (drawn from the injector's
+    seeded rng).  ``scale`` is the magnitude for perturbation sites.
+    """
+    prob: float = 1.0
+    times: Optional[int] = 1
+    after: int = 0
+    scale: float = 1e-3
+    message: str = "injected fault"
+
+
+class FaultInjector:
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(seed)
+        self.specs: Dict[str, FaultSpec] = {}
+        self.seen: Dict[str, int] = {}
+        self.fired: Dict[str, int] = {}
+        self.log: List[Tuple[str, int]] = []
+        self._lock = threading.Lock()
+
+    def arm(self, site: str, **kw) -> "FaultInjector":
+        self.specs[site] = FaultSpec(**kw)
+        self.seen[site] = 0
+        self.fired[site] = 0
+        return self
+
+    def fire_count(self, site: str) -> int:
+        return self.fired.get(site, 0)
+
+    def _should_fire(self, site: str) -> Optional[FaultSpec]:
+        spec = self.specs.get(site)
+        if spec is None:
+            return None
+        with self._lock:
+            k = self.seen.get(site, 0)
+            self.seen[site] = k + 1
+            if k < spec.after:
+                return None
+            if spec.times is not None and \
+                    self.fired.get(site, 0) >= spec.times:
+                return None
+            if spec.prob < 1.0 and self.rng.random() >= spec.prob:
+                return None
+            self.fired[site] = self.fired.get(site, 0) + 1
+            self.log.append((site, k))
+        return spec
+
+    def maybe_raise(self, site: str, exc=OSError) -> None:
+        spec = self._should_fire(site)
+        if spec is not None:
+            raise exc(f"{spec.message} [site={site} "
+                      f"fire={self.fired[site]}]")
+
+    def perturb(self, site: str, arr: np.ndarray) -> np.ndarray:
+        """Deterministic additive perturbation (seeded rng, call-order
+        reproducible) when the site is armed; identity otherwise."""
+        spec = self._should_fire(site)
+        if spec is None:
+            return arr
+        return arr + spec.scale * self.rng.standard_normal(arr.shape)
+
+
+# -------------------------------------------------- process-global hooks
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def get() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+def activate(inj: Optional[FaultInjector]) -> Optional[FaultInjector]:
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, inj
+    return prev
+
+
+@contextlib.contextmanager
+def injected(seed: int = 0,
+             arms: Optional[Dict[str, dict]] = None
+             ) -> Iterator[FaultInjector]:
+    """``with faults.injected(seed=7, arms={faults.BINV: {...}}) as inj``
+    — installs a fresh injector for the block, restoring the previous
+    one (usually None) on exit."""
+    inj = FaultInjector(seed)
+    for site, kw in (arms or {}).items():
+        inj.arm(site, **kw)
+    prev = activate(inj)
+    try:
+        yield inj
+    finally:
+        activate(prev)
+
+
+def maybe_raise(site: str, exc=OSError) -> None:
+    """Production-side hook: no-op unless an injector is active."""
+    if _ACTIVE is not None:
+        _ACTIVE.maybe_raise(site, exc)
+
+
+def perturb(site: str, arr: np.ndarray) -> np.ndarray:
+    if _ACTIVE is None:
+        return arr
+    return _ACTIVE.perturb(site, arr)
+
+
+def fire_count(site: str) -> int:
+    return 0 if _ACTIVE is None else _ACTIVE.fire_count(site)
+
+
+# ----------------------------------------------------------- test double
+
+
+class FlakySource:
+    """ChunkSource wrapper raising transient ``OSError`` on chosen chunk
+    indices for their first ``fail_times`` read attempts — the
+    deterministic stand-in for a flaky disk/network read.  Duck-types the
+    ``core.bucketing.ChunkSource`` protocol so it wraps any source.
+    """
+
+    def __init__(self, inner, *, fail_chunks=(1,), fail_times: int = 2,
+                 exc=OSError):
+        self.inner = inner
+        self.fail_chunks = set(int(i) for i in fail_chunks)
+        self.fail_times = int(fail_times)
+        self.exc = exc
+        self.attempts: Dict[int, int] = {}
+        self.raised = 0
+
+    def chunks(self, chunk_rows: int):
+        for i, chunk in enumerate(self.inner.chunks(chunk_rows)):
+            if i in self.fail_chunks:
+                k = self.attempts.get(i, 0)
+                if k < self.fail_times:
+                    self.attempts[i] = k + 1
+                    self.raised += 1
+                    raise self.exc(f"flaky chunk {i} (attempt {k + 1})")
+            yield chunk
+
+    @property
+    def num_rows(self) -> int:
+        return self.inner.num_rows
+
+    @property
+    def num_cols(self) -> int:
+        return self.inner.num_cols

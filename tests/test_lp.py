@@ -3,8 +3,24 @@ numpy/JAX twin agreement, infeasibility detection."""
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # only the property tests need hypothesis; the deterministic tests
+    # below must still run on a bare container
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    class _St:
+        @staticmethod
+        def integers(*a, **k):
+            return None
+
+    st = _St()
 
 from repro.core.lp import (INFEASIBLE, OPTIMAL, solve_lp, solve_lp_np,
                            verify_optimality)
@@ -80,6 +96,28 @@ def test_lp_known_optimum():
     assert res.status == OPTIMAL
     assert res.obj == pytest.approx(-2.5, abs=1e-9)
     assert res.x == pytest.approx([0.5, 1.0], abs=1e-9)
+
+
+def test_degenerate_lp_terminates_under_stall_monitor():
+    """A fully-degenerate feasibility LP (zero objective: every dual
+    pivot has theta == 0) cycles under the plain BFRT pivot rule; the
+    stall monitor escalates to Bland's rule and both twins terminate on
+    the same answer instead of spinning to the iteration cap."""
+    from repro.core.guard import NumericalMonitor
+    rng = np.random.default_rng(1)
+    m, n = 40, 80
+    A = rng.integers(-1, 2, size=(m, n)).astype(float)
+    b = A @ rng.uniform(0.2, 0.8, n)     # feasible equality RHS
+    c = np.zeros(n)
+    mon = NumericalMonitor()
+    r1 = solve_lp_np(c, A, b, b, np.ones(n), monitor=mon, max_iters=8000)
+    r2 = solve_lp(c, A, b, b, np.ones(n), max_iters=8000)
+    assert r1.status == OPTIMAL
+    assert r2.status == OPTIMAL
+    assert r1.iters < 8000 and r2.iters < 8000
+    assert mon.stall_events > 0 and mon.bland_pivots > 0
+    assert abs(r1.obj - r2.obj) <= 1e-9
+    assert any(note.startswith("stall:") for note in r1.notes)
 
 
 def test_lp_bfrt_long_step_count():
