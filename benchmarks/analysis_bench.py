@@ -1,0 +1,59 @@
+"""Static-analysis benchmark: contract-check wall time and collective-byte
+budget headroom per hot path.
+
+The contract layer is itself on the CI critical path, so its cost is a
+budget too: this entry records how long each hot-path lowering + audit
+takes on the host mesh grid, and how much of the declared per-pivot
+collective-byte budget ``pq_step`` actually uses (headroom shrinking
+toward 1.0 over PRs = traffic creep the byte model didn't price in).
+
+Results land in ``results/analysis.json`` (the same report the CLI
+writes, refreshed with grid='host' records).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(full: bool = False):
+    from repro.analysis.contracts import run_contracts
+
+    violations, records, wall_s = run_contracts("host")
+    emit("analysis/contracts_total", wall_s * 1e6,
+         f"hot_paths={len(records)};violations={len(violations)}")
+    for rec in records:
+        name = rec["hot_path"].replace("@", "_")
+        derived = []
+        if "budget_used_frac" in rec:
+            derived.append(f"budget_used={rec['budget_used_frac']:.3f}")
+        coll = rec.get("collective_bytes", {})
+        if coll:
+            derived.append(f"coll_bytes={coll.get('total', 0.0):.3e}")
+        dense = rec.get("dense_passes")
+        if dense is not None:
+            derived.append(f"dense={dense['top']}+{dense['cond']}c")
+        emit(f"analysis/{name}", rec["wall_s"] * 1e6, ";".join(derived))
+
+    os.makedirs("results", exist_ok=True)
+    out = {"grid": "host", "wall_s": round(wall_s, 3),
+           "violations": [v.format() for v in violations],
+           "hot_paths": records}
+    # refresh the CLI's report in place when it exists (keep lint/baseline
+    # sections from the last full run), else write a contracts-only one
+    path = os.path.join("results", "analysis.json")
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            prev["contracts"] = {"violations": out["violations"],
+                                 "hot_paths": records}
+            prev.setdefault("wall_s", {})["contracts_bench"] = out["wall_s"]
+            out = prev
+        except (ValueError, KeyError):
+            pass  # unreadable report: overwrite with the fresh records
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    assert not violations, "\n".join(out["violations"])

@@ -49,6 +49,7 @@ def _write_relation(n: int, seed: int, dir_: str) -> str:
                                    shape=(n, len(ATTRS)))
     step = 1 << 20
     table = make_table("tpch", min(n, step), seed=seed)
+    # repro: allow[REPRO005] memmap seeding: block is bounded at 1<<20 rows
     block = np.stack([table[a] for a in ATTRS], axis=1)
     for a in range(0, n, step):
         b = min(a + step, n)

@@ -73,6 +73,7 @@ def build_entry(n: int, d_f: int, *, heap: bool = True,
     time budget when ``seed_heap_budget_s`` > 0), KD-tree at matched group
     count, and the probe parity record."""
     table = make_table("tpch", n, seed=seed)
+    # repro: allow[REPRO005] in-memory baseline arm by design
     X = np.stack([table[a] for a in ATTRS], axis=1)
     entry = {"n": n, "d_f": d_f, "target": n // d_f}
 

@@ -18,9 +18,9 @@ from repro.hostdev import ensure_host_devices
 
 ensure_host_devices()
 
-from benchmarks import (ablations, dual_reducer_bench, grid, infeasibility,
-                        partitioning, pds_scaling, ratio_score, roofline,
-                        scaling, warm_start)
+from benchmarks import (ablations, analysis_bench, dual_reducer_bench, grid,
+                        infeasibility, partitioning, pds_scaling, ratio_score,
+                        roofline, scaling, warm_start)
 from benchmarks.common import ROWS
 
 MODULES = {
@@ -34,6 +34,7 @@ MODULES = {
     "miniexp7_8_dual_reducer": dual_reducer_bench,
     "appc_warm_start": warm_start,
     "roofline": roofline,
+    "analysis": analysis_bench,
 }
 
 
@@ -52,6 +53,7 @@ def main() -> None:
         t = time.time()
         try:
             mod.run(full=args.full)
+        # repro: allow[REPRO004] harness by design: record and continue
         except Exception as e:  # keep the harness going; record the failure
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
         print(f"# {name} took {time.time() - t:.1f}s", flush=True)

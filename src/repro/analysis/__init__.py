@@ -1,0 +1,27 @@
+"""repro.analysis — static proof of the engine's invariants.
+
+Two layers, one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.contracts` lowers the registered hot paths
+  (distributed pq/update/refresh steps, the jitted LP twin, the Pallas
+  kernels, batched split-tree descent) and asserts machine-checkable
+  contracts on the jaxpr/HLO — zero collectives in ``update_step``,
+  dense-pass discipline, no host round-trips in device loops, per-pivot
+  collective bytes within declared budgets, dtype preservation.
+* :mod:`repro.analysis.lint` is an AST pass encoding the repo's paid-for
+  footgun classes as named REPRO rules with per-rule suppressions.
+
+The CLI gates CI with a baseline ratchet (``analysis/baseline.json``):
+new violations fail, pinned ones must only shrink.  See docs/ANALYSIS.md.
+"""
+from repro.analysis.report import (Violation, compare_baseline,
+                                   count_by_key, load_baseline,
+                                   save_baseline, write_report)
+from repro.analysis.lint import (RULES, lint_file, lint_paths, lint_source,
+                                 DEFAULT_LINT_DIRS)
+
+__all__ = [
+    "Violation", "compare_baseline", "count_by_key", "load_baseline",
+    "save_baseline", "write_report", "RULES", "lint_file", "lint_paths",
+    "lint_source", "DEFAULT_LINT_DIRS",
+]

@@ -1,0 +1,540 @@
+"""Project lint — the footgun classes this repo has already paid for,
+encoded as named AST rules.
+
+Every rule below traces to a bug a past PR burned time on; the lint
+exists so the *class* can never silently come back:
+
+``REPRO001`` ``lax.cond``/``lax.switch`` branches closing over mutable
+    enclosing-function state.  PR 1's jit-vs-eager divergence: branch
+    jaxprs are cached by function identity, so a closure reused across
+    cond calls with *different* captured tracers replays the first
+    call's state.  Safe sites (identical captured state at every call
+    within one trace) carry an explicit suppression.
+``REPRO002`` unguarded ``jnp.float64`` references or float literals
+    beyond f32 range (the ``1e300`` sentinel class) outside
+    ``hostdev.py``.  PR 2's ``big_sentinel`` fix: under default no-x64
+    such literals warn and truncate to ``inf``, silently poisoning
+    masked reductions.
+``REPRO003`` host materialisation of traced values (``.item()``,
+    ``float()``/``int()``/``bool()``, ``np.asarray``) inside functions
+    that are jitted or passed to ``lax`` control flow — a silent
+    device-to-host sync (or a tracer error) in a hot loop.
+``REPRO004`` bare ``except Exception`` / ``except:``.  The guard
+    contract (PR 6) owns exception containment; any other broad handler
+    can swallow the faults the resilience suite injects.  Sanctioned
+    sites (``core/guard.py`` ladder, ``core/engine.py`` solve guard,
+    ``runtime/faults.py``, harness loops) carry suppressions tying them
+    to the guard ladder.
+``REPRO005`` whole-column materialisation of a ``Relation``
+    (``np.asarray(table[...])``-style, or a full ``[:]`` slice of a
+    column) — defeats PR 4's out-of-core discipline; ``LazyColumn``
+    raises at runtime, the lint catches it before it ships.
+``REPRO006`` un-budgeted solver loops: a ``for``/``while`` whose header
+    mentions ``max_iters``/``max_pivots``/``max_nodes`` but whose body
+    never consults a ``SolveBudget`` — exactly the silent ``ITER_LIMIT``
+    truncation PR 6 removed.
+
+Suppression: append ``# repro: allow[REPROxxx] <justification>`` on the
+flagged line or the line directly above it.  The justification is
+mandatory — a bare allow is itself a violation of the same rule.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.report import Violation
+
+RULES: Dict[str, str] = {
+    "REPRO001": "lax.cond/lax.switch branch closes over enclosing "
+                "mutable state (branch jaxprs are cached by function "
+                "identity)",
+    "REPRO002": "unguarded float64 reference / beyond-f32-range literal "
+                "(truncates to inf under no-x64)",
+    "REPRO003": "host materialisation of a traced value inside a "
+                "jitted/control-flow function",
+    "REPRO004": "bare `except Exception` outside the guard contract",
+    "REPRO005": "whole-column materialisation of a streamed Relation",
+    "REPRO006": "solver loop bounded by max_iters/pivots/nodes without "
+                "charging a SolveBudget",
+}
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*allow\[(REPRO\d{3})\]\s*(.*)")
+
+# REPRO002: anything beyond float32 range is the 1e300 sentinel class.
+_F32_MAX = 3.5e38  # repro: allow[REPRO002] the rule's own threshold
+_F64_ALLOWED_FILES = ("hostdev.py",)
+
+# REPRO003: the jit-entry decorators / tracing higher-order callees.
+_JIT_DECOS = ("jax.jit", "jit", "pjit", "jax.pjit")
+_TRACING_CALLEES = ("lax.while_loop", "lax.fori_loop", "lax.scan",
+                    "lax.cond", "lax.switch", "lax.map", "shard_map",
+                    "pallas_call", "jax.vmap", "vmap", "jax.grad",
+                    "checkify")
+_HOST_CASTS = ("float", "int", "bool")
+_HOST_NP_CALLS = ("np.asarray", "np.array", "numpy.asarray",
+                  "numpy.array")
+
+# REPRO005: names that conventionally hold a (possibly streamed) Relation.
+_RELATION_NAMES = ("table", "rel", "relation")
+_NP_GATHER_CALLS = ("np.asarray", "np.array", "np.stack",
+                    "np.column_stack", "np.vstack", "np.concatenate",
+                    "numpy.asarray", "numpy.array", "numpy.stack")
+
+_BUDGET_TOKENS = ("max_iters", "max_pivots", "max_nodes")
+
+
+def _qualname(node: ast.AST) -> str:
+    """Dotted name of an expression ('jax.lax.cond'), '' if not a name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_relationish(node: ast.AST) -> bool:
+    """Name/attribute that conventionally binds a Relation."""
+    q = _qualname(node)
+    if not q:
+        return False
+    last = q.split(".")[-1]
+    return last in _RELATION_NAMES
+
+
+class _Scope:
+    """One function scope: bindings + locally defined functions."""
+
+    def __init__(self, node: Optional[ast.AST]):
+        self.node = node
+        self.bound: Set[str] = set()
+        self.funcs: Dict[str, ast.AST] = {}
+
+
+def _function_params(fn: ast.AST) -> Set[str]:
+    args = fn.args
+    names = {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    return names
+
+
+def _local_bindings(fn: ast.AST) -> Set[str]:
+    """Names bound inside ``fn`` (params, assignments, nested defs) —
+    NOT descending into nested functions' own bodies for assignments."""
+    bound = set(_function_params(fn))
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bound.add(node.name)
+            continue                      # do not descend: own scope
+        if isinstance(node, ast.Lambda):
+            continue
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for al in node.names:
+                bound.add((al.asname or al.name).split(".")[0])
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+        stack.extend(ast.iter_child_nodes(node))
+    return bound
+
+
+def _free_names(fn: ast.AST) -> Set[str]:
+    """Names loaded in ``fn``'s body that it does not bind itself
+    (descends into nested functions, subtracting their params too)."""
+    import builtins
+    bound = _local_bindings(fn)
+    loads: Set[str] = set()
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    stack: List[Tuple[ast.AST, frozenset]] = [(b, frozenset()) for b in body]
+    while stack:
+        node, extra = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            inner = extra | frozenset(_function_params(node)) \
+                | frozenset(_local_bindings(node))
+            body2 = node.body if isinstance(node.body, list) \
+                else [node.body]
+            stack.extend((b, inner) for b in body2)
+            continue
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id not in bound and node.id not in extra \
+                    and not hasattr(builtins, node.id):
+                loads.add(node.id)
+        stack.extend((c, extra) for c in ast.iter_child_nodes(node))
+    return loads
+
+
+class Linter:
+    """Single-file linter; :func:`lint_source` is the entry point."""
+
+    def __init__(self, src: str, path: str):
+        self.src = src
+        self.path = path
+        self.lines = src.splitlines()
+        self.tree = ast.parse(src, filename=path)
+        self.module_names = self._module_level_names()
+        self.violations: List[Violation] = []
+        # function node -> enclosing function nodes (outermost first)
+        self._enclosing: Dict[ast.AST, List[ast.AST]] = {}
+        self._traced: Set[ast.AST] = set()
+        self._fn_by_scope: Dict[ast.AST, Dict[str, ast.AST]] = {}
+
+    # ------------------------------------------------------------- infra
+
+    def _module_level_names(self) -> Set[str]:
+        names: Set[str] = set()
+        for node in self.tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                for al in node.names:
+                    names.add((al.asname or al.name).split(".")[0])
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                names.add(node.name)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            names.add(n.id)
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                names.add(node.target.id)
+        return names
+
+    def _suppressed(self, rule: str, line: int) -> bool:
+        """Trailing comment on the flagged line, or anywhere in the
+        contiguous comment block immediately above it."""
+        def _match(ln: int) -> bool:
+            m = _SUPPRESS_RE.search(self.lines[ln - 1])
+            return bool(m and m.group(1) == rule and m.group(2).strip())
+
+        if 1 <= line <= len(self.lines) and _match(line):
+            return True
+        ln = line - 1
+        while 1 <= ln <= len(self.lines) and \
+                self.lines[ln - 1].lstrip().startswith("#"):
+            if _match(ln):
+                return True
+            ln -= 1
+        return False
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if self._suppressed(rule, line):
+            return
+        self.violations.append(Violation(rule, self.path, line, message))
+
+    # ------------------------------------------------------------ passes
+
+    def run(self) -> List[Violation]:
+        self._index_functions()
+        self._mark_traced()
+        self._walk_rules()
+        return self.violations
+
+    def _index_functions(self) -> None:
+        """Record every function/lambda with its chain of enclosing
+        function nodes, and a per-scope name -> FunctionDef map."""
+        def visit(node: ast.AST, chain: List[ast.AST]) -> None:
+            scope_fns = self._fn_by_scope.setdefault(
+                chain[-1] if chain else self.tree, {})
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    self._enclosing[child] = list(chain)
+                    scope_fns[child.name] = child
+                    visit(child, chain + [child])
+                elif isinstance(child, ast.Lambda):
+                    self._enclosing[child] = list(chain)
+                    visit(child, chain + [child])
+                else:
+                    visit(child, chain)
+        visit(self.tree, [])
+
+    def _decorated_jit(self, fn: ast.AST) -> bool:
+        for deco in getattr(fn, "decorator_list", ()):  # lambdas: none
+            target = deco
+            if isinstance(deco, ast.Call):
+                q = _qualname(deco.func)
+                if q.endswith("partial"):
+                    for a in deco.args:
+                        if _qualname(a).endswith("jit"):
+                            return True
+                target = deco.func
+            if _qualname(target).endswith(_JIT_DECOS):
+                return True
+        return False
+
+    def _mark_traced(self) -> None:
+        """A function is 'traced' if jit-decorated, passed to a tracing
+        higher-order callee, or nested inside a traced function."""
+        for fn in self._enclosing:
+            if self._decorated_jit(fn):
+                self._traced.add(fn)
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            q = _qualname(call.func)
+            if not q.endswith(_TRACING_CALLEES):
+                continue
+            cargs = list(call.args) + [kw.value for kw in call.keywords]
+            for a in cargs:
+                for ref in self._resolve_fn_args(a, call):
+                    self._traced.add(ref)
+        # propagate: nested inside traced -> traced
+        for fn, chain in self._enclosing.items():
+            if any(c in self._traced for c in chain):
+                self._traced.add(fn)
+
+    def _resolve_fn_args(self, arg: ast.AST,
+                         at: ast.AST) -> Iterable[ast.AST]:
+        """Function nodes an argument expression refers to (lambdas,
+        names of locally defined functions; descends list literals)."""
+        if isinstance(arg, ast.Lambda):
+            yield arg
+        elif isinstance(arg, (ast.List, ast.Tuple)):
+            for el in arg.elts:
+                yield from self._resolve_fn_args(el, at)
+        elif isinstance(arg, ast.Name):
+            fn = self._lookup_function(arg.id, at)
+            if fn is not None:
+                yield fn
+
+    def _lookup_function(self, name: str,
+                         at: ast.AST) -> Optional[ast.AST]:
+        """Resolve ``name`` to a FunctionDef visible at ``at`` (nearest
+        enclosing scope outwards, module last)."""
+        chain = None
+        for fn, ch in self._enclosing.items():
+            if fn is at:
+                chain = ch
+                break
+        if chain is None:
+            node, chain = at, []
+            while not isinstance(node, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef, ast.Lambda,
+                                        ast.Module)):
+                node = getattr(node, "_parent", self.tree)
+            # fall back to searching all scopes containing this lineno
+            chain = [fn for fn in self._enclosing
+                     if self._contains(fn, at)]
+        for scope in list(reversed(chain)) + [self.tree]:
+            fn = self._fn_by_scope.get(scope, {}).get(name)
+            if fn is not None:
+                return fn
+        return None
+
+    def _contains(self, fn: ast.AST, node: ast.AST) -> bool:
+        lo = getattr(fn, "lineno", -1)
+        hi = getattr(fn, "end_lineno", -1)
+        ln = getattr(node, "lineno", -2)
+        return lo <= ln <= hi
+
+    # ------------------------------------------------------- rule checks
+
+    def _walk_rules(self) -> None:
+        basename = os.path.basename(self.path)
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._check_cond_closures(node)       # REPRO001
+                self._check_relation_gather(node)     # REPRO005
+            if isinstance(node, (ast.Attribute, ast.Name)) and \
+                    basename not in _F64_ALLOWED_FILES:
+                q = _qualname(node)
+                if q in ("jnp.float64", "jax.numpy.float64",
+                         "np.float128", "numpy.float128"):
+                    self._emit("REPRO002", node,
+                               f"{q} reference — derive the dtype from "
+                               "an operand (cf. distributed.big_sentinel)"
+                               )
+            if isinstance(node, ast.Constant) and \
+                    isinstance(node.value, float) and \
+                    abs(node.value) >= _F32_MAX and \
+                    basename not in _F64_ALLOWED_FILES:
+                self._emit("REPRO002", node,
+                           f"literal {node.value!r} exceeds f32 range — "
+                           "truncates to inf under no-x64")
+            if isinstance(node, ast.ExceptHandler):
+                self._check_bare_except(node)         # REPRO004
+            if isinstance(node, (ast.For, ast.While)):
+                self._check_unbudgeted_loop(node)     # REPRO006
+            if isinstance(node, ast.Subscript):
+                self._check_full_slice(node)          # REPRO005 (b)
+        self._check_traced_materialisation()          # REPRO003
+
+    # REPRO001 ---------------------------------------------------------
+    def _check_cond_closures(self, call: ast.Call) -> None:
+        q = _qualname(call.func)
+        if not (q.endswith("lax.cond") or q.endswith("lax.switch")
+                or q in ("cond", "switch")):
+            return
+        if q in ("cond", "switch") and q not in self.module_names:
+            return
+        branches: List[ast.AST] = []
+        for a in call.args[1:]:
+            if isinstance(a, (ast.Lambda,)):
+                branches.append(a)
+            elif isinstance(a, (ast.List, ast.Tuple)):
+                branches.extend(e for e in a.elts
+                                if isinstance(e, ast.Lambda)
+                                or isinstance(e, ast.Name))
+            elif isinstance(a, ast.Name):
+                branches.append(a)
+        for br in branches:
+            fn = br if isinstance(br, ast.Lambda) else \
+                self._lookup_function(br.id, call)
+            if fn is None:
+                continue
+            chain = self._enclosing.get(fn)
+            if not chain:           # module-level function: no closure
+                continue
+            enclosing_bound: Set[str] = set()
+            for outer in chain:
+                enclosing_bound |= _local_bindings(outer)
+            captured = sorted((_free_names(fn) - self.module_names)
+                              & enclosing_bound)
+            if captured:
+                name = getattr(fn, "name", "<lambda>")
+                self._emit("REPRO001", call,
+                           f"branch {name!r} closes over enclosing state "
+                           f"{captured} — pass it as a cond operand")
+
+    # REPRO003 ---------------------------------------------------------
+    def _check_traced_materialisation(self) -> None:
+        for fn in self._traced:
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef,
+                                         ast.Lambda)):
+                        continue    # checked via their own traced entry
+                    if not isinstance(node, ast.Call):
+                        continue
+                    q = _qualname(node.func)
+                    if q.endswith(".item") and not node.args:
+                        self._emit("REPRO003", node,
+                                   ".item() inside a traced function "
+                                   "forces a device sync / tracer error")
+                    elif q in _HOST_CASTS and node.args and \
+                            not isinstance(node.args[0], ast.Constant):
+                        self._emit("REPRO003", node,
+                                   f"{q}() on a traced value — use "
+                                   "jnp ops or hoist out of the jit")
+                    elif q in _HOST_NP_CALLS:
+                        self._emit("REPRO003", node,
+                                   f"{q}() materialises a traced value "
+                                   "on host — use jnp.asarray")
+
+    # REPRO004 ---------------------------------------------------------
+    def _check_bare_except(self, node: ast.ExceptHandler) -> None:
+        def broad(t: ast.AST) -> bool:
+            return _qualname(t).split(".")[-1] in ("Exception",
+                                                   "BaseException")
+        ty = node.type
+        if ty is None or broad(ty) or (
+                isinstance(ty, ast.Tuple) and any(broad(e)
+                                                  for e in ty.elts)):
+            self._emit("REPRO004", node,
+                       "bare except — narrow it, or tie it to the guard "
+                       "ladder with an explicit suppression")
+
+    # REPRO005 ---------------------------------------------------------
+    def _check_relation_gather(self, call: ast.Call) -> None:
+        q = _qualname(call.func)
+        if q not in _NP_GATHER_CALLS:
+            return
+        for a in call.args:
+            for sub in ast.walk(a):
+                if isinstance(sub, ast.Subscript) and \
+                        _is_relationish(sub.value) and \
+                        not isinstance(sub.slice, (ast.Slice, ast.Tuple)):
+                    self._emit(
+                        "REPRO005", call,
+                        f"{q}({_qualname(sub.value)}[...]) materialises "
+                        "a whole column — gather candidate rows via "
+                        "gather_rows()/chunks()")
+                    return
+
+    def _check_full_slice(self, node: ast.Subscript) -> None:
+        # table['col'][:] — full-column slice of a relation column
+        if not (isinstance(node.slice, ast.Slice)
+                and node.slice.lower is None and node.slice.upper is None
+                and node.slice.step is None):
+            return
+        base = node.value
+        if isinstance(base, ast.Subscript) and _is_relationish(base.value):
+            self._emit("REPRO005", node,
+                       "full [:] slice of a Relation column — use "
+                       "gather_rows()/chunks()")
+
+    # REPRO006 ---------------------------------------------------------
+    def _check_unbudgeted_loop(self, node: ast.AST) -> None:
+        header = node.iter if isinstance(node, ast.For) else node.test
+        tokens = {n.id for n in ast.walk(header)
+                  if isinstance(n, ast.Name)}
+        tokens |= {n.attr for n in ast.walk(header)
+                   if isinstance(n, ast.Attribute)}
+        if not tokens & set(_BUDGET_TOKENS):
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and "budget" in sub.id.lower():
+                return
+            if isinstance(sub, ast.Attribute) and \
+                    "budget" in sub.attr.lower():
+                return
+        self._emit("REPRO006", node,
+                   "loop bounded by max_iters/pivots/nodes never "
+                   "consults a SolveBudget — silent truncation "
+                   "(the pre-PR-6 ITER_LIMIT class)")
+
+
+# ------------------------------------------------------------- entry points
+
+
+def lint_source(src: str, path: str = "<memory>") -> List[Violation]:
+    """Lint one source string (the unit-test entry point)."""
+    try:
+        return Linter(src, path).run()
+    except SyntaxError as e:
+        return [Violation("REPRO000", path, e.lineno or 0,
+                          f"syntax error: {e.msg}")]
+
+
+def lint_file(path: str, root: str = ".") -> List[Violation]:
+    with open(path) as f:
+        src = f.read()
+    return lint_source(src, os.path.relpath(path, root))
+
+
+DEFAULT_LINT_DIRS = ("src/repro", "benchmarks", "examples", "scripts")
+
+
+def lint_paths(paths: Sequence[str], root: str = "."
+               ) -> Tuple[List[Violation], int]:
+    """Lint every ``*.py`` under ``paths`` (files or directories).
+    Returns (violations, files_linted)."""
+    files: List[str] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full):
+            files.append(full)
+        else:
+            for dirpath, _, names in os.walk(full):
+                files.extend(os.path.join(dirpath, n)
+                             for n in sorted(names) if n.endswith(".py"))
+    out: List[Violation] = []
+    for f in sorted(files):
+        out.extend(lint_file(f, root))
+    return out, len(files)

@@ -147,7 +147,12 @@ def make_pq_step(mesh: Mesh, m: int, n: int,
         rmax = jax.lax.pmax(jnp.max(jnp.where(finite, ratio, -big)), axes)
         rmin = jax.lax.pmin(jnp.min(jnp.where(finite, ratio, big)), axes)
         span = jnp.maximum(rmax - rmin, 1e-12)
-        edges = rmin + span * (jnp.arange(1, num_buckets + 1) / num_buckets)
+        # keep the edge grid in the pricing dtype: under x64 the bare
+        # int-arange / int division promotes to f64 and silently drags
+        # every downstream comparison with it on f32 problems
+        grid = jnp.arange(1, num_buckets + 1,
+                          dtype=ratio.dtype) / num_buckets
+        edges = rmin + span * grid
         bucket = jnp.clip(jnp.searchsorted(edges, ratio), 0, num_buckets - 1)
         hist_l = jnp.zeros(num_buckets, cost.dtype).at[bucket].add(
             jnp.where(finite, cost, 0.0))
@@ -244,8 +249,10 @@ def make_pq_step(mesh: Mesh, m: int, n: int,
         def fvec_dense(_):
             dx = jnp.where(flip_mask, jnp.where(at_up, -width, width), 0.0)
             return A_loc @ dx
-        fvec = jax.lax.psum(
-            jax.lax.cond(over, fvec_dense, fvec_sparse, None), axes)
+        # repro: allow[REPRO001] one call site per trace: the captured
+        # shard state is identical for both branches of this single cond
+        fvec = jax.lax.cond(over, fvec_dense, fvec_sparse, None)
+        fvec = jax.lax.psum(fvec, axes)
         # entering column, contributed by its owner shard
         j_loc = jnp.clip(q - rank * n_loc, 0, n_loc - 1)
         owner = (q >= rank * n_loc) & (q < (rank + 1) * n_loc)
@@ -343,6 +350,16 @@ def _cached_steps(mesh: Mesh, m: int, npad: int, num_buckets: int,
     return pq, make_update_step(mesh), make_refresh_step(mesh)
 
 
+def _put(v, sharding, dtype=None):
+    """Host value -> device array at its final (replicated) sharding in
+    ONE explicit device_put.  Feeding a bare Python scalar to jnp.asarray
+    is an IMPLICIT host-to-device transfer, and handing a single-device
+    array to the sharded step jits is an implicit device-to-device
+    reshard — the strict_numerics guard (jax.transfer_guard) rejects
+    both; explicit device_put is the sanctioned path."""
+    return jax.device_put(np.asarray(v, dtype), sharding)
+
+
 def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
                   max_iters: int = 5000, tol: float = 1e-7,
                   warm_start=None, refactor_every: int = None,
@@ -404,6 +421,7 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
 
     col_sh = NamedSharding(mesh, P(None, axes))
     vec_sh = NamedSharding(mesh, P(axes))
+    rep_sh = NamedSharding(mesh, P())
     A_pad = np.concatenate([A, np.zeros((m, Npad - N))], axis=1)
     A_dev = jax.device_put(A_pad, col_sh)
     cf_dev = jax.device_put(pad(cf), vec_sh)
@@ -436,7 +454,7 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
         Binv = np.linalg.inv(A[:, basis])
         y = Binv.T @ cf[basis]
         d_dev, axn = refresh_step(A_dev, cf_dev, state_dev, l_dev, u_dev,
-                                  jnp.asarray(y))
+                                  _put(y, rep_sh))
         xB = -Binv @ np.asarray(axn)
         since = 0
 
@@ -475,11 +493,20 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
                 s = 1.0 if delta > 0 else -1.0
 
                 faults.maybe_raise(faults.SHARD, RuntimeError)
-                rho = jnp.asarray(Binv[r])
+                rho = _put(Binv[r], rep_sh)
                 (alpha_dev, flip_dev, r_best, q, d_q, at_up_q, Acol, fvec,
                  n_flips, has_cross, exact) = pq_step(
                     A_dev, d_dev, l_dev, u_dev, state_dev, rho,
-                    jnp.asarray(s), jnp.asarray(abs(delta)))
+                    _put(s, rep_sh), _put(abs(delta), rep_sh))
+                # ONE explicit device->host pull for everything the host
+                # loop consumes this pivot (alpha/flip stay sharded).
+                # Implicit scalar syncs (bool(x), int(x)) are banned here:
+                # each is a separate blocking transfer, and the
+                # strict_numerics test fixture (jax.transfer_guard)
+                # rejects them outright.
+                (q, d_q, at_up_q, Acol, fvec, has_cross, exact) = \
+                    jax.device_get((q, d_q, at_up_q, Acol, fvec,
+                                    has_cross, exact))
                 if not bool(has_cross):
                     if since > 0:   # could be drift: retry on fresh factors
                         refresh()
@@ -511,8 +538,8 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
                 basis[r] = q
                 d_dev, state_dev = update_step(
                     d_dev, state_dev, alpha_dev, flip_dev,
-                    jnp.asarray(theta), jnp.asarray(q, jnp.int64),
-                    jnp.asarray(leave, jnp.int64), jnp.asarray(above))
+                    _put(theta, rep_sh), _put(q, rep_sh, np.int64),
+                    _put(leave, rep_sh, np.int64), _put(above, rep_sh))
                 since += 1
                 # anti-cycling: degenerate streaks force a refactorize;
                 # past stall_bland, fall back to the host twin (which has
@@ -530,6 +557,8 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
                         break
                 else:
                     stall = 0
+    # repro: allow[REPRO004] guard contract: any shard/collective failure
+    # (incl. the dist.shard fault site) falls back to the single-host twin
     except Exception as e:          # dead shard / collective failure
         fallback_reason = f"{type(e).__name__}: {e}"
 
@@ -569,7 +598,8 @@ def solve_lp_dist(c, A_t, bl, bu, ub, *, mesh: Mesh, lb=None,
     return res
 
 
-def pq_input_specs(m: int, n: int, dtype=jnp.float64):
+def pq_input_specs(m: int, n: int,
+                   dtype=jnp.float64):  # repro: allow[REPRO002] x64 production dtype; the f32 contract grid passes dtype=f32
     """Abstract inputs for the pq_step dry-run cell:
     (A, d, l, u, state, rho, s, budget)."""
     f = lambda shape: jax.ShapeDtypeStruct(shape, dtype)

@@ -120,6 +120,8 @@ class Hierarchy:
                 "pass an in-memory table or layer0_backend='bucketing'")
         self.layer0_backend = layer0_backend
         if rel.in_memory:
+            # repro: allow[REPRO005] guarded by rel.in_memory: columns
+            # are already resident; this is a view stack, not a load
             X0 = np.stack([np.asarray(rel[a], np.float64)
                            for a in self.attrs], axis=1)
             self.layers: List[Layer] = [

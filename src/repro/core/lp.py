@@ -510,12 +510,16 @@ def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
                         - jnp.eye(m, dtype=A.dtype)).max()
         drift = (resid > DRIFT_TOL) & (since > 0)
         n_drift = n_drift + drift.astype(jnp.int32)
+        # repro: allow[REPRO001] do_ref captures the SAME loop-carried
+        # tracers at both cond sites within one trace of this body, so the
+        # identity-cached branch jaxpr is correct by construction
         Binv, xB, d, y, since = jax.lax.cond(
             drift | (since >= refactor_every), do_ref, lambda ops: ops,
             (Binv, xB, d, y, since))
         lB, uB = l[basis], u[basis]
         viol = jnp.maximum(lB - xB, xB - uB)
         # optimality suspected on stale factors -> refactorize, re-check
+        # repro: allow[REPRO001] same captured tracers as the cond above
         Binv, xB, d, y, since = jax.lax.cond(
             (viol[jnp.argmax(viol)] <= tol) & (since > 0), do_ref,
             lambda ops: ops, (Binv, xB, d, y, since))
@@ -679,11 +683,14 @@ def solve_lp(c, A_t, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
                             np.asarray(at_upper0, bool), np.zeros(m),
                             notes=tuple(notes))
         cap = budget.lp_iter_cap(max_iters)
+    # one explicit device->host pull for the whole result tuple: implicit
+    # scalar syncs (int(status), float(obj)) are each a separate blocking
+    # transfer and fail under the strict_numerics transfer guard
     status, x, obj, it, basis, at_upper, y, n_bland, n_drift = \
-        _solve_lp_jax(
+        jax.device_get(_solve_lp_jax(
             jnp.asarray(cf), jnp.asarray(A), jnp.asarray(l),
             jnp.asarray(u), jnp.asarray(basis0), jnp.asarray(at_upper0),
-            cap)
+            cap))
     status, it = int(status), int(it)
     n_bland, n_drift = int(n_bland), int(n_drift)
     if n_bland:

@@ -74,11 +74,14 @@ def _solve_lp_kernel_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
                         - jnp.eye(m, dtype=A.dtype)).max()
         drift = (resid > DRIFT_TOL) & (since > 0)
         n_drift = n_drift + drift.astype(jnp.int32)
+        # repro: allow[REPRO001] do_ref captures the SAME loop-carried
+        # tracers at both cond sites within one trace of this body
         Binv, xB, d, y, since = jax.lax.cond(
             drift | (since >= refactor_every), do_ref, lambda ops: ops,
             (Binv, xB, d, y, since))
         lB, uB = l[basis], u[basis]
         viol = jnp.maximum(lB - xB, xB - uB)
+        # repro: allow[REPRO001] same captured tracers as the cond above
         Binv, xB, d, y, since = jax.lax.cond(
             (viol[jnp.argmax(viol)] <= tol) & (since > 0), do_ref,
             lambda ops: ops, (Binv, xB, d, y, since))

@@ -128,6 +128,7 @@ class PackageQuery:
             return c, A, bl, bu, ub
         if not _is_streamed(table):
             # dict of arrays, or an in-memory Relation (columns resident)
+            # repro: allow[REPRO005] guarded by _is_streamed above
             view = {nm: np.asarray(table[nm], np.float64) for nm in names}
             n = len(view[self.objective_attr])
             c, A, ub = self._assemble(view, n)

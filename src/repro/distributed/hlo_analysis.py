@@ -240,6 +240,130 @@ def while_trip_counts(hlo: str) -> Dict[str, int]:
     return out
 
 
+# ------------------------------------------------- host callbacks/transfers
+#
+# The contract layer (repro.analysis.contracts) asserts that hot paths never
+# smuggle a host round-trip into a device loop: a python callback custom-call
+# or an infeed/outfeed/send/recv inside a while body serializes every trip on
+# the host.  This walker finds such ops and reports whether each sits inside
+# a while body (with the recovered trip count, so the serialization cost is
+# trip-weighted like the collective model above).
+
+_HOST_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(infeed|outfeed|send-done|recv-done|send|recv|copy-start)\(")
+_CUSTOM_CALL_RE = re.compile(r"custom-call\(")
+_CALL_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+# custom-call targets that round-trip through the host python runtime
+_HOST_TARGET_RE = re.compile(r"callback|host", re.IGNORECASE)
+
+
+def _reach_multipliers(hlo: str, comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """computation -> trip multiplier reachable from ENTRY (1 outside
+    loops, product of trip counts inside nested while bodies)."""
+    mult: Dict[str, int] = {}
+
+    def walk(name: str, m: int):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = max(mult.get(name, 0), m)
+        for line in comps.get(name, ()):
+            wm = _WHILE_RE.search(line)
+            if wm:
+                trips = _trip_count(comps.get(wm.group(1), []))
+                walk(wm.group(1), m)
+                walk(wm.group(2), m * trips)
+            cm = re.search(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)",
+                           line)
+            if cm and cm.group(1) in comps:
+                walk(cm.group(1), m)
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            entry = m.group(1) if m else None
+            break
+    if entry and entry in comps:
+        walk(entry, 1)
+    else:
+        for name in comps:
+            mult.setdefault(name, 1)
+    return mult
+
+
+def host_transfer_ops(hlo: str) -> List[dict]:
+    """Host round-trip ops: infeed/outfeed/send/recv and python-callback
+    custom-calls, each tagged with its computation, whether that
+    computation runs inside a while loop, and the trip multiplier.
+
+    Benign custom-calls (Sharding, SPMD reshape markers, TopK, ...) are
+    NOT reported — only targets matching ``callback``/``host``.
+    """
+    comps = _split_computations(hlo)
+    bodies = set(while_trip_counts(hlo))
+    mult = _reach_multipliers(hlo, comps)
+    out: List[dict] = []
+    for name, lines in comps.items():
+        in_while = name in bodies or mult.get(name, 1) > 1
+        for line in lines:
+            hm = _HOST_OP_RE.search(line)
+            op = None
+            target = ""
+            if hm:
+                op = hm.group(1)
+            elif _CUSTOM_CALL_RE.search(line):
+                tm = _CALL_TARGET_RE.search(line)
+                if tm and _HOST_TARGET_RE.search(tm.group(1)):
+                    op = "custom-call"
+                    target = tm.group(1)
+            if op is None:
+                continue
+            out.append({"op": op, "target": target, "computation": name,
+                        "in_while": bool(in_while),
+                        "trips": int(mult.get(name, 1))})
+    return out
+
+
+def while_body_stats(hlo: str, default_group: int = 16
+                     ) -> Dict[str, Tuple[int, CollectiveStats]]:
+    """Per-while-body collective traffic for ONE trip (un-multiplied),
+    plus the recovered trip count: body -> (trips, stats).
+
+    This is the per-pivot/per-step view: ``collective_bytes`` answers
+    "how much total", this answers "how much per iteration" so budgets
+    can be declared per pivot regardless of the loop bound.
+    """
+    comps = _split_computations(hlo)
+    trips = while_trip_counts(hlo)
+    out: Dict[str, Tuple[int, CollectiveStats]] = {}
+    for body, t in trips.items():
+        by: Dict[str, float] = {}
+        cnt: Dict[str, int] = {}
+
+        def walk(name: str, seen=None):
+            seen = set() if seen is None else seen
+            if name in seen:
+                return
+            seen.add(name)
+            for line in comps.get(name, ()):
+                cm = _COLLECTIVE_RE.search(line)
+                if cm and "-done(" not in line:
+                    ty = cm.group(1) or cm.group(2)
+                    kind = cm.group(3)
+                    n = _group_size(line, default_group)
+                    b = shape_bytes(ty) * _FACTORS[kind](n)
+                    by[kind] = by.get(kind, 0.0) + b
+                    cnt[kind] = cnt.get(kind, 0) + 1
+                sub = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+                if sub and sub.group(1) in comps:
+                    walk(sub.group(1), seen)
+
+        walk(body)
+        out[body] = (t, CollectiveStats(by, cnt, sum(by.values())))
+    return out
+
+
 # ---------------------------------------------------------------- FLOPs
 #
 # XLA's HloCostAnalysis (exposed via compiled.cost_analysis()) does NOT

@@ -35,8 +35,8 @@ def _mem_dict(mem) -> dict:
         try:
             v = getattr(mem, attr)
             out[attr] = int(v() if callable(v) else v)
-        except Exception:
-            pass
+        except (AttributeError, TypeError, ValueError, RuntimeError):
+            pass  # field absent on this jaxlib's MemoryAnalysis
     if not out:
         out["repr"] = str(mem)
     return out
@@ -91,49 +91,31 @@ def run_pq_cell(*, multi_pod: bool, n: int = 1 << 24) -> dict:
     """Dry-run the paper's own technique: one distributed dual-simplex
     pivot — the pricing + exact-BFRT selection step (consuming MAINTAINED
     reduced costs, no c - y @ A recompute) and the post-pivot O(n/p)
-    d-update step — on the full mesh."""
-    from jax.sharding import NamedSharding
-    from repro.core.distributed import (make_pq_step, make_update_step,
-                                        pq_input_specs)
-    import jax.numpy as jnp
+    d-update step — on the full mesh.
+
+    Delegates to the contract checker so the dry-run and CI prove the
+    SAME invariants (zero update collectives, pq byte budget, dense-pass
+    discipline, f32 cleanliness) instead of re-deriving them here."""
+    from repro.analysis import contracts
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": "pq_step", "shape": f"m8_n{n}", "mesh": mesh_name}
-    t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
-    m = 8
-    rep = jax.sharding.PartitionSpec()
-    with mesh:
-        step, col_spec, vec_spec = make_pq_step(mesh, m, n)
-        args_abs = pq_input_specs(m, n)
-        in_sh = (NamedSharding(mesh, col_spec),) + tuple(
-            NamedSharding(mesh, vec_spec) for _ in range(4)) + tuple(
-            NamedSharding(mesh, rep) for _ in range(3))
-        lowered = jax.jit(step, in_shardings=in_sh).lower(*args_abs)
-        compiled = lowered.compile()
-        hlo = compiled.as_text()
-        coll = collective_bytes(hlo)
-        st = hlo_stats(hlo)
-        rec.update(status="OK", compile_s=round(time.time() - t0, 1),
-                   n_devices=int(mesh.size),
-                   memory=_mem_dict(compiled.memory_analysis()),
-                   collectives={k: float(v) for k, v in coll.merged().items()},
-                   collective_counts=dict(coll.count_by_kind),
-                   dot_flops=st.flops, dot_bytes=st.dot_bytes)
-        # the post-pivot maintenance step must lower with ZERO collectives
-        f = lambda shape, dt=jnp.float64: jax.ShapeDtypeStruct(shape, dt)
-        upd_abs = (f((n,)), jax.ShapeDtypeStruct((n,), jnp.int32),
-                   f((n,)), jax.ShapeDtypeStruct((n,), jnp.bool_),
-                   f(()), jax.ShapeDtypeStruct((), jnp.int64),
-                   jax.ShapeDtypeStruct((), jnp.int64),
-                   jax.ShapeDtypeStruct((), jnp.bool_))
-        upd_sh = tuple(NamedSharding(mesh, vec_spec) for _ in range(4)) + \
-            tuple(NamedSharding(mesh, rep) for _ in range(4))
-        upd = jax.jit(make_update_step(mesh), in_shardings=upd_sh
-                      ).lower(*upd_abs).compile()
-        upd_coll = collective_bytes(upd.as_text())
-        rec.update(update_collectives={k: float(v) for k, v in
-                                       upd_coll.merged().items()},
-                   update_collective_counts=dict(upd_coll.count_by_kind))
+    pq = contracts.check_pq_step(mesh, 8, n)
+    upd = contracts.check_update_step(mesh, 8, n)
+    viols = pq.violations + upd.violations
+    rec.update(
+        status="OK" if not viols else "CONTRACT_FAIL",
+        compile_s=round(pq.wall_s + upd.wall_s, 1),
+        n_devices=int(mesh.size),
+        collectives=pq.record["collective_bytes"],
+        collective_counts=pq.record["collective_counts"],
+        budget_bytes=pq.record["budget_bytes"],
+        budget_used_frac=pq.record["budget_used_frac"],
+        dense_passes=pq.record["dense_passes"],
+        update_collectives=upd.record["collective_bytes"],
+        update_collective_counts=upd.record["collective_counts"],
+        violations=[v.format() for v in viols],
+    )
     return rec
 
 
@@ -158,19 +140,25 @@ def main():
             mesh_name = "2x16x16" if mp else "16x16"
             try:
                 rec = run_pq_cell(multi_pod=mp)
-            except Exception as e:
+            except (ValueError, TypeError, KeyError, RuntimeError,
+                    NotImplementedError, OSError) as e:
+                # XlaRuntimeError subclasses RuntimeError; anything else
+                # (assertion, keyboard interrupt) should still crash loudly
                 rec = {"arch": "pq_step", "mesh": mesh_name, "status": "FAIL",
                        "error": f"{type(e).__name__}: {e}",
                        "traceback": traceback.format_exc()[-4000:]}
+            if rec["status"] != "OK":
                 rc = 1
             with open(os.path.join(args.out,
                                    f"pq_step__{mesh_name}.json"), "w") as f:
                 json.dump(rec, f, indent=1)
             print(f"[dryrun] pq_step {mesh_name}: {rec['status']} "
                   + rec.get("error", "")[:200], flush=True)
-            if rec["status"] == "OK":
+            for v in rec.get("violations", ()):
+                print(f"  {v}", flush=True)
+            if rec["status"] in ("OK", "CONTRACT_FAIL"):
                 print(f"  coll_bytes/dev={rec['collectives'].get('total', 0):.3e}"
-                      f" dot_flops/dev={rec['dot_flops']:.3e}")
+                      f" budget_used={rec['budget_used_frac']:.2f}")
         return rc
 
     cells = []
@@ -193,7 +181,8 @@ def main():
         print(f"[dryrun] {a} {s} {mesh_name} ...", flush=True)
         try:
             rec = run_cell(a, s, multi_pod=mp, save_hlo=args.save_hlo)
-        except Exception as e:
+        except (ValueError, TypeError, KeyError, RuntimeError,
+                NotImplementedError, OSError) as e:
             rec = {"arch": a, "shape": s, "mesh": mesh_name,
                    "status": "FAIL", "error": f"{type(e).__name__}: {e}",
                    "traceback": traceback.format_exc()[-4000:]}

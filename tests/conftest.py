@@ -20,3 +20,16 @@ import repro.core  # noqa: F401
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def strict_numerics():
+    """Fail the test on ANY implicit host<->device transfer and on NaNs
+    escaping jitted code.  The engine's contract (REPRO003 / IRC003) is
+    that every transfer around the hot paths is explicit — jnp.asarray /
+    device_put on the way in, device_get on the way out — so the jitted
+    LP twin and the distributed-pricing paths must pass under a full
+    transfer guard."""
+    import jax
+    with jax.transfer_guard("disallow"), jax.debug_nans(True):
+        yield

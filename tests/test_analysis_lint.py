@@ -1,0 +1,171 @@
+"""The project lint layer: every REPRO rule fires on a seeded snippet,
+suppression comments silence them (with a justification required), the
+baseline ratchet admits the pinned debt and nothing else at repo head,
+and the CLI exits non-zero per seeded rule."""
+import json
+import os
+
+import pytest
+
+from repro.analysis.lint import (DEFAULT_LINT_DIRS, RULES, lint_paths,
+                                 lint_source)
+from repro.analysis.report import (compare_baseline, count_by_key,
+                                   load_baseline)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SNIPPETS = {
+    "REPRO001": """\
+import jax
+def f(x):
+    y = x + 1
+    def t(_):
+        return y
+    def e(_):
+        return x * 0
+    return jax.lax.cond(x.sum() > 0, t, e, None)
+""",
+    "REPRO002": """\
+import jax.numpy as jnp
+def f(x):
+    big = 1e300
+    return jnp.float64(x) + big
+""",
+    "REPRO003": """\
+import jax
+import numpy as np
+@jax.jit
+def f(x):
+    q = x.item()
+    return np.asarray(x) + q
+""",
+    "REPRO004": """\
+def f():
+    try:
+        g()
+    except Exception:
+        pass
+""",
+    "REPRO005": """\
+import numpy as np
+def f(table, idx):
+    return np.asarray(table["price"])[idx]
+""",
+    "REPRO006": """\
+def solve(A, max_iters=100):
+    for it in range(max_iters):
+        step(A)
+""",
+}
+
+
+@pytest.mark.parametrize("rule", sorted(SNIPPETS))
+def test_rule_fires_on_seeded_snippet(rule):
+    vs = lint_source(SNIPPETS[rule], "snippet.py")
+    assert any(v.rule == rule for v in vs), \
+        f"{rule} ({RULES[rule]}) did not fire"
+    assert all(v.path == "snippet.py" and v.line > 0 for v in vs)
+
+
+@pytest.mark.parametrize("rule", sorted(SNIPPETS))
+def test_suppression_comment_silences_rule(rule):
+    vs = lint_source(SNIPPETS[rule], "snippet.py")
+    lines = SNIPPETS[rule].splitlines()
+    for line_no in sorted({v.line for v in vs if v.rule == rule},
+                          reverse=True):
+        indent = lines[line_no - 1][:len(lines[line_no - 1])
+                                    - len(lines[line_no - 1].lstrip())]
+        lines.insert(line_no - 1,
+                     f"{indent}# repro: allow[{rule}] tested escape hatch")
+    vs2 = lint_source("\n".join(lines) + "\n", "snippet.py")
+    assert not any(v.rule == rule for v in vs2)
+
+
+def test_suppression_requires_justification():
+    src = """\
+def f():
+    try:
+        g()
+    # repro: allow[REPRO004]
+    except Exception:
+        pass
+"""
+    assert any(v.rule == "REPRO004" for v in lint_source(src, "s.py"))
+
+
+def test_suppression_is_rule_specific():
+    src = """\
+def f():
+    try:
+        g()
+    # repro: allow[REPRO001] wrong rule id
+    except Exception:
+        pass
+"""
+    assert any(v.rule == "REPRO004" for v in lint_source(src, "s.py"))
+
+
+def test_syntax_error_reports_repro000():
+    vs = lint_source("def f(:\n", "bad.py")
+    assert [v.rule for v in vs] == ["REPRO000"]
+
+
+def test_repo_head_is_clean_against_baseline():
+    """The tree carries no lint debt beyond the pinned baseline."""
+    vs, n_files = lint_paths(DEFAULT_LINT_DIRS, root=ROOT)
+    assert n_files > 50
+    pinned = load_baseline(os.path.join(ROOT, "analysis", "baseline.json"))
+    new, shrunk, stale = compare_baseline(vs, pinned)
+    assert new == [], "new violations:\n" + "\n".join(
+        v.format() for v in new)
+    assert stale == [], f"stale baseline pins: {stale}"
+
+
+def test_baseline_ratchet_counts():
+    pinned = {"REPRO004:a.py": 2}
+    vs3 = lint_source(SNIPPETS["REPRO004"] * 3, "a.py")
+    new, _, _ = compare_baseline(vs3, pinned)
+    assert len(new) == 1                    # 3 found, 2 pinned
+    vs1 = lint_source(SNIPPETS["REPRO004"], "a.py")
+    new, shrunk, _ = compare_baseline(vs1, pinned)
+    assert new == [] and shrunk == ["REPRO004:a.py"]
+    new, _, stale = compare_baseline([], pinned)
+    assert new == [] and stale == ["REPRO004:a.py"]
+    assert count_by_key(vs3) == {"REPRO004:a.py": 3}
+
+
+@pytest.mark.parametrize("rule", sorted(SNIPPETS))
+def test_cli_exits_nonzero_on_seeded_violation(rule, tmp_path):
+    from repro.analysis.__main__ import main
+    (tmp_path / "seeded.py").write_text(SNIPPETS[rule])
+    out = tmp_path / "analysis.json"
+    rc = main(["--grid", "none", "--root", str(tmp_path),
+               "--lint-dir", ".", "--out", str(out)])
+    assert rc == 1
+    rep = json.loads(out.read_text())
+    assert rep["exit_code"] == 1
+    assert any(v["rule"] == rule for v in rep["lint"]["violations"])
+
+
+def test_cli_repo_head_with_baseline_passes(tmp_path):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "analysis.json"
+    rc = main(["--grid", "none", "--root", ROOT,
+               "--baseline", os.path.join(ROOT, "analysis/baseline.json"),
+               "--out", str(out)])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["exit_code"] == 0 and rep["grid"] == "none"
+
+
+def test_cli_update_baseline_refuses_to_grow(tmp_path):
+    from repro.analysis.__main__ import main
+    (tmp_path / "seeded.py").write_text(SNIPPETS["REPRO004"])
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({"version": 1, "pinned": {}}))
+    rc = main(["--grid", "none", "--root", str(tmp_path),
+               "--lint-dir", ".", "--baseline", str(base),
+               "--update-baseline",
+               "--out", str(tmp_path / "analysis.json")])
+    assert rc == 2
+    assert load_baseline(str(base)) == {}   # pin file untouched

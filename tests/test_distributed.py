@@ -31,7 +31,7 @@ def _random_state(seed, m=4, n=4096):
     return A, d, lo, hi, state, rho
 
 
-def test_pq_step_matches_sequential_bfrt(mesh):
+def test_pq_step_matches_sequential_bfrt(mesh, strict_numerics):
     """The step consumes MAINTAINED reduced costs and — via the exact
     in-crossing-bucket walk — selects the same entering breakpoint as the
     sequential BFRT."""
@@ -42,8 +42,10 @@ def test_pq_step_matches_sequential_bfrt(mesh):
     (alpha_d, flips_d, r_best, q, d_q, at_up_q, Acol, fvec, n_flips,
      has_cross, exact) = step(
         jnp.asarray(A), jnp.asarray(d), jnp.asarray(lo), jnp.asarray(hi),
-        jnp.asarray(state), jnp.asarray(rho), jnp.asarray(s),
-        jnp.asarray(budget))
+        jnp.asarray(state), jnp.asarray(rho),
+        # scalars must ride in as 0-d arrays: a bare Python float is an
+        # implicit transfer under the strict_numerics guard
+        jnp.asarray(np.asarray(s)), jnp.asarray(np.asarray(budget)))
     # sequential reference from the same maintained d (no recompute)
     alpha = rho @ A
     sa = s * alpha
@@ -129,7 +131,7 @@ def _meshes():
 
 
 @pytest.mark.parametrize("shape", _meshes())
-def test_distributed_solve_matches_numpy_twin(shape):
+def test_distributed_solve_matches_numpy_twin(shape, strict_numerics):
     """Cold full solve through the distributed pricing path reaches the
     numpy twin's objective AND basis, with an independent certificate."""
     mesh = jax.make_mesh(shape, ("data", "model"))

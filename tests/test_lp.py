@@ -87,6 +87,18 @@ def test_lp_detects_infeasible_constraints():
     assert res.status == INFEASIBLE
 
 
+def test_lp_jit_twin_under_strict_numerics(strict_numerics):
+    """The jitted twin's host boundary is fully explicit (jnp.asarray in,
+    device_get out): it must solve correctly under a blanket implicit-
+    transfer guard with the NaN debugger armed."""
+    c, A, bl, bu, ub = _random_lp(7)
+    r1 = solve_lp_np(c, A, bl, bu, ub)
+    r2 = solve_lp(c, A, bl, bu, ub)
+    assert r1.status == r2.status
+    if r1.status == OPTIMAL:
+        assert abs(r1.obj - r2.obj) <= 1e-6 * (1 + abs(r1.obj))
+
+
 def test_lp_known_optimum():
     # max x0 + 2 x1 s.t. x0 + x1 <= 1.5, 0<=x<=1  -> x=(0.5,1), obj 2.5
     c = np.array([-1.0, -2.0])
