@@ -18,9 +18,10 @@ from repro.hostdev import ensure_host_devices
 
 ensure_host_devices()
 
-from benchmarks import (ablations, analysis_bench, dual_reducer_bench, grid,
-                        infeasibility, partitioning, pds_scaling, ratio_score,
-                        roofline, scaling, warm_start)
+from benchmarks import (ablations, analysis_bench, cache_bench,
+                        dual_reducer_bench, grid, infeasibility,
+                        partitioning, pds_scaling, ratio_score, roofline,
+                        scaling, warm_start)
 from benchmarks.common import ROWS
 
 MODULES = {
@@ -33,6 +34,7 @@ MODULES = {
     "miniexp5_partitioning": partitioning,
     "miniexp7_8_dual_reducer": dual_reducer_bench,
     "appc_warm_start": warm_start,
+    "cache": cache_bench,
     "roofline": roofline,
     "analysis": analysis_bench,
 }

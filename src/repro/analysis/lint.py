@@ -33,6 +33,13 @@ exists so the *class* can never silently come back:
     mentions ``max_iters``/``max_pivots``/``max_nodes`` but whose body
     never consults a ``SolveBudget`` — exactly the silent ``ITER_LIMIT``
     truncation PR 6 removed.
+``REPRO007`` cache writes under swallowed exceptions: a
+    ``*cache*.store/put/populate/insert`` call inside a ``try`` whose
+    broad handler can eat the failure, or inside an ``except`` body.
+    The cross-query cache contract (PR 8, ``core/qcache.py``) admits
+    only *clean* solves; a write whose failure path is swallowed — or
+    that IS a failure path — can poison every later hit.  Cache writes
+    belong at guard-contract sites, after validation.
 
 Suppression: append ``# repro: allow[REPROxxx] <justification>`` on the
 flagged line or the line directly above it.  The justification is
@@ -59,6 +66,8 @@ RULES: Dict[str, str] = {
     "REPRO005": "whole-column materialisation of a streamed Relation",
     "REPRO006": "solver loop bounded by max_iters/pivots/nodes without "
                 "charging a SolveBudget",
+    "REPRO007": "cache write inside a broad exception handler / try — "
+                "a swallowed failure can populate poisoned artifacts",
 }
 
 _SUPPRESS_RE = re.compile(r"#\s*repro:\s*allow\[(REPRO\d{3})\]\s*(.*)")
@@ -84,6 +93,9 @@ _NP_GATHER_CALLS = ("np.asarray", "np.array", "np.stack",
                     "numpy.asarray", "numpy.array", "numpy.stack")
 
 _BUDGET_TOKENS = ("max_iters", "max_pivots", "max_nodes")
+
+# REPRO007: mutating methods on a receiver whose name mentions a cache.
+_CACHE_WRITE_METHODS = ("store", "put", "populate", "insert")
 
 
 def _qualname(node: ast.AST) -> str:
@@ -371,6 +383,8 @@ class Linter:
                 self._check_unbudgeted_loop(node)     # REPRO006
             if isinstance(node, ast.Subscript):
                 self._check_full_slice(node)          # REPRO005 (b)
+            if isinstance(node, ast.Try):
+                self._check_cache_write_swallow(node)  # REPRO007
         self._check_traced_materialisation()          # REPRO003
 
     # REPRO001 ---------------------------------------------------------
@@ -478,6 +492,43 @@ class Linter:
             self._emit("REPRO005", node,
                        "full [:] slice of a Relation column — use "
                        "gather_rows()/chunks()")
+
+    # REPRO007 ---------------------------------------------------------
+    def _check_cache_write_swallow(self, node: ast.Try) -> None:
+        def broad(h: ast.ExceptHandler) -> bool:
+            ty = h.type
+            if ty is None:
+                return True
+
+            def b(t: ast.AST) -> bool:
+                return _qualname(t).split(".")[-1] in ("Exception",
+                                                       "BaseException")
+            return b(ty) or (isinstance(ty, ast.Tuple)
+                             and any(b(e) for e in ty.elts))
+
+        def cache_writes(stmts):
+            for stmt in stmts:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Call) and \
+                            isinstance(sub.func, ast.Attribute) and \
+                            sub.func.attr in _CACHE_WRITE_METHODS and \
+                            "cache" in _qualname(sub.func.value).lower():
+                        yield sub
+
+        if any(broad(h) for h in node.handlers):
+            for call in cache_writes(node.body):
+                self._emit(
+                    "REPRO007", call,
+                    f"{_qualname(call.func.value)}.{call.func.attr}() in "
+                    "a try whose broad handler can swallow its failure — "
+                    "populate caches only at guard-contract sites")
+        for h in node.handlers:
+            for call in cache_writes(h.body):
+                self._emit(
+                    "REPRO007", call,
+                    f"{_qualname(call.func.value)}.{call.func.attr}() "
+                    "inside an except body — a failure path must never "
+                    "populate the cache")
 
     # REPRO006 ---------------------------------------------------------
     def _check_unbudgeted_loop(self, node: ast.AST) -> None:

@@ -40,8 +40,8 @@ benchmarks multi-pivot solves through this path against ``solve_lp_np``.
 """
 from __future__ import annotations
 
-import functools
 import inspect
+from collections import OrderedDict
 from typing import Tuple
 
 import numpy as np
@@ -339,15 +339,70 @@ def make_refresh_step(mesh: Mesh):
 # ------------------------------------------------------ distributed solver
 
 
-@functools.lru_cache(maxsize=64)
+STEP_CACHE_MAXSIZE = 64   # distinct (mesh, shape) step triples kept
+
+
+class BoundedStepCache:
+    """LRU cache for the jitted (pq, update, refresh) step triples.
+
+    Replaces a bare ``functools.lru_cache``: same bound, but with
+    explicit hit/miss/eviction counters (compiled-executable churn is a
+    real cost — an eviction storm means shapes are cycling faster than
+    the cache can hold and should be visible, not silent).
+    """
+
+    def __init__(self, maxsize: int = STEP_CACHE_MAXSIZE):
+        self.maxsize = int(maxsize)
+        self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_create(self, key: tuple, factory):
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry
+        self.misses += 1
+        entry = factory()
+        self._entries[key] = entry
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._entries),
+                "maxsize": self.maxsize}
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+_STEP_CACHE = BoundedStepCache()
+
+
+def step_cache_stats() -> dict:
+    """Counters of the module step-triple cache (observability API)."""
+    return _STEP_CACHE.stats()
+
+
 def _cached_steps(mesh: Mesh, m: int, npad: int, num_buckets: int,
                   gather_k: int):
     """One jitted (pq, update, refresh) triple per (mesh, shape) so
     repeated solves — cascades, benchmarks, B&B re-solves — reuse the
     compiled executables instead of re-tracing every call."""
-    pq, _, _ = make_pq_step(mesh, m, npad, num_buckets=num_buckets,
-                            gather_k=gather_k)
-    return pq, make_update_step(mesh), make_refresh_step(mesh)
+    def _build():
+        pq, _, _ = make_pq_step(mesh, m, npad, num_buckets=num_buckets,
+                                gather_k=gather_k)
+        return pq, make_update_step(mesh), make_refresh_step(mesh)
+    return _STEP_CACHE.get_or_create((mesh, m, npad, num_buckets, gather_k),
+                                     _build)
 
 
 def _put(v, sharding, dtype=None):

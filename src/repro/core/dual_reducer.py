@@ -37,6 +37,8 @@ class PackageResult:
     sub_ilp_size: int = 0
     status: str = ""
     report: Optional[object] = None   # guard.SolveReport (engine.solve)
+    lp_warm: Optional[WarmStart] = None   # lp1 final basis (cache artifact)
+    ps_stats: Optional[object] = None     # shading.PSStats (cascade solves)
 
     def integrality_gap(self, eps: float = 0.1) -> float:
         """Paper §4.1 metric vs. this result's own LP bound."""
@@ -143,7 +145,8 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
         nz = xr > 0.5
         obj_query = -objr if query.maximize else objr
         return PackageResult(True, S[nz], xr[nz], obj_query, lp_obj_query,
-                             fallbacks, n_sel, status="degraded_rounded")
+                             fallbacks, n_sel, status="degraded_rounded",
+                             lp_warm=lp1.warm)
 
     fallbacks = 0
     while True:
@@ -161,7 +164,7 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
             obj_query = -res.obj if query.maximize else res.obj
             return PackageResult(True, sub[nz], mult[nz], obj_query,
                                  lp_obj_query, fallbacks, len(sel),
-                                 status="ok")
+                                 status="ok", lp_warm=lp1.warm)
         out_of_budget = budget is not None and budget.exhausted()
         if len(sel) >= n or out_of_budget:
             if ladder:

@@ -41,7 +41,8 @@ class PackageQueryEngine:
                  seed: int = 0, partitioner_backend: str = "dlv",
                  layer0_backend: Optional[str] = None,
                  chunk_rows: Optional[int] = None,
-                 memory_rows: Optional[int] = None, mesh=None):
+                 memory_rows: Optional[int] = None, mesh=None,
+                 cache=None):
         self.table: Relation = as_relation(table, columns=list(attrs))
         self.attrs = list(attrs)
         self.d_f = d_f
@@ -54,6 +55,13 @@ class PackageQueryEngine:
         self.rng = np.random.default_rng(seed)
         self.hierarchy: Optional[Hierarchy] = None
         self.partition_time_s: float = 0.0
+        # cross-query artifact cache: True -> a private QCache; or pass a
+        # QCache instance shared across engines (the serving-layer shape)
+        if cache is True:
+            from repro.core.qcache import QCache
+            cache = QCache()
+        # identity test, not truthiness: an empty QCache has len() == 0
+        self.cache = None if cache in (None, False) else cache
 
     @property
     def n(self) -> int:
@@ -87,9 +95,15 @@ class PackageQueryEngine:
         raises; ``budget=`` (a ``guard.SolveBudget``) bounds the whole
         cascade end to end.  ``guarded=False`` disables the degradation
         ladder and re-raises exceptions (the unguarded baseline for the
-        robustness bench)."""
+        robustness bench).
+
+        With a ``cache`` (engine knob), solves consult the cross-query
+        artifact cache before descending and populate it after clean
+        solves; hit/miss/prune counters land on ``res.report``."""
         if self.hierarchy is None:
             self.partition()
+        if self.cache is not None:
+            self.cache.register(self.hierarchy)
         t0 = time.time()
         report = guard.SolveReport(budget=budget or guard.SolveBudget(),
                                    monitor=guard.NumericalMonitor())
@@ -100,7 +114,8 @@ class PackageQueryEngine:
                                       alpha=self.alpha, dr_q=dr_q,
                                       rng=self.rng, ilp_kwargs=ilp_kwargs,
                                       budget=report.budget, report=report,
-                                      ladder=guarded, **ps_kwargs)
+                                      ladder=guarded, qcache=self.cache,
+                                      **ps_kwargs)
         # repro: allow[REPRO004] guard contract: guarded solve must never
         # raise -- contain, report, and return an empty (infeasible) result
         except Exception as e:

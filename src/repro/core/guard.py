@@ -211,6 +211,11 @@ class SolveReport:
     ilp_nodes: int = 0
     fault_retries: int = 0
     wall_s: float = 0.0
+    warm_rejected: int = 0    # cascade warm-basis re-maps that fell cold
+    # cross-query cache accounting (engine cache= knob; repro.core.qcache)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_pruned_lps: int = 0  # layer LPs skipped thanks to cached sets
 
     def note(self, msg: str) -> None:
         self.notes.append(str(msg))
@@ -254,4 +259,9 @@ class SolveReport:
                  f"wall={b.elapsed_s:.2f}s" if b is not None else "")
         fb = f" fallbacks={','.join(self.fallbacks)}" if self.fallbacks \
             else ""
-        return f"guard[{self.status}]{spent}{fb}"
+        cache = (f" cache=hits:{self.cache_hits}/misses:{self.cache_misses}"
+                 f" pruned_lps={self.cache_pruned_lps}"
+                 if self.cache_hits or self.cache_misses else "")
+        wr = f" warm_rejected={self.warm_rejected}" if self.warm_rejected \
+            else ""
+        return f"guard[{self.status}]{spent}{fb}{cache}{wr}"

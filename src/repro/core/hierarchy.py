@@ -33,7 +33,8 @@ itself is a ROADMAP item).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -132,6 +133,8 @@ class Hierarchy:
             self.layers = [Layer(rel, None, None, 1e-9)]
         kw = dict(backend_kwargs or {})
         self._append_state: Optional[dict] = None
+        self._fingerprint: Optional[str] = None
+        self._invalidation_hooks: List[Callable] = []
         while self.layers[-1].size > alpha and len(self.layers) <= max_layers:
             if len(self.layers) == 1 and not rel.in_memory:
                 # streamed layer 0: the bucketing backend consumes the
@@ -172,6 +175,48 @@ class Hierarchy:
     @property
     def L(self) -> int:
         return len(self.layers) - 1
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable identity of this hierarchy's *structure* (cross-query
+        cache key component).  Derived from the build parameters, layer
+        shapes and per-layer group-count vectors — identical rebuilds of
+        the same data share it; any structural difference breaks it.
+        Appends do NOT change the fingerprint: they only grow leaf
+        bookkeeping, and cache consistency across appends is handled by
+        the invalidation hooks below (leaf-local, not wholesale)."""
+        if self._fingerprint is None:
+            h = hashlib.sha1()
+            h.update(repr((self.relation.num_rows, tuple(self.attrs),
+                           self.d_f, self.alpha, self.backend,
+                           self.layer0_backend,
+                           tuple(l.size for l in self.layers))).encode())
+            for lyr in self.layers[1:]:
+                h.update(np.ascontiguousarray(
+                    lyr.part.counts, dtype=np.int64).tobytes())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
+
+    # ----------------------------------------------------- invalidation
+    def add_invalidation_hook(self, cb: Callable) -> None:
+        """Register ``cb(hier, touched_leaf_gids)`` to fire on every
+        :meth:`append` with the layer-0 leaves the new rows landed in
+        (cache layers subscribe here; see ``repro.core.qcache``)."""
+        if cb not in self._invalidation_hooks:
+            self._invalidation_hooks.append(cb)
+
+    def leaf_ancestors(self, leaves) -> Dict[int, np.ndarray]:
+        """Map layer -> group ids on the ancestor paths of the given
+        layer-0 leaves: ``{1: leaves, 2: their layer-2 groups, ...}`` —
+        the exact set of cached per-group artifacts an append to those
+        leaves invalidates."""
+        ids = np.unique(np.asarray(leaves, np.int64))
+        out: Dict[int, np.ndarray] = {1: ids}
+        for l in range(2, self.L + 1):
+            ids = np.unique(np.asarray(self.layers[l].part.gid[ids],
+                                       np.int64))
+            out[l] = ids
+        return out
 
     def get_tuples(self, l_minus_1: int, g: int) -> np.ndarray:
         """Member indices (at layer l-1) of group g (a layer-l tuple)."""
@@ -257,6 +302,9 @@ class Hierarchy:
         nz = np.maximum(st["cnt"], 1.0)[:, None]
         var = np.maximum(st["s2"] / nz - (st["s1"] / nz) ** 2, 0.0)
         tv = st["cnt"] * var.max(axis=1)
+        touched = np.unique(gids)
+        for cb in self._invalidation_hooks:
+            cb(self, touched)
         return AppendReport(gids, np.flatnonzero(tv > bar), bar)
 
     @property

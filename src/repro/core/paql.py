@@ -28,6 +28,7 @@ paper's architecture avoids.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -71,6 +72,55 @@ def _gather_view(table, names: Sequence[str],
 
 
 @dataclasses.dataclass(frozen=True)
+class QuerySignature:
+    """Canonical, hashable identity of a package query's constraint
+    region (the cross-query cache key — see ``repro.core.qcache``).
+
+    Constraint order is normalized away (sorted by constraint identity),
+    bounds are canonical floats, and equality/hash follow from the
+    frozen-dataclass field tuple.  ``keys`` holds one ``(attr,
+    avg_target)`` identity per constraint ('' = COUNT, None = plain
+    SUM); ``los``/``his`` the matching interval endpoints.
+    """
+    objective_attr: str
+    maximize: bool
+    repeat: int
+    predicate_attr: Optional[str]
+    keys: Tuple[Tuple[str, Optional[float]], ...]
+    los: Tuple[float, ...]
+    his: Tuple[float, ...]
+
+    def same_structure(self, other: "QuerySignature") -> bool:
+        """Identical up to the constraint intervals: same objective and
+        sense, same repeat/predicate, same constraint identities."""
+        return (self.objective_attr == other.objective_attr
+                and self.maximize == other.maximize
+                and self.repeat == other.repeat
+                and self.predicate_attr == other.predicate_attr
+                and self.keys == other.keys)
+
+    def contained_in(self, other: "QuerySignature") -> bool:
+        """True when this query's constraint region is contained in
+        ``other``'s: same structure and every interval nested.  Sound
+        for the cache's subsumption path — any package feasible for
+        ``self`` is feasible for ``other``, so ``other``'s candidate
+        sets cover at least the region ``self`` can draw from."""
+        if not self.same_structure(other):
+            return False
+        return all(lo >= olo and hi <= ohi
+                   for lo, olo, hi, ohi in zip(self.los, other.los,
+                                               self.his, other.his))
+
+    def digest(self) -> str:
+        """Process-stable hex digest (string ``hash()`` is salted per
+        process; persisted/shared caches need this instead)."""
+        payload = repr((self.objective_attr, self.maximize, self.repeat,
+                        self.predicate_attr, self.keys, self.los,
+                        self.his))
+        return hashlib.sha1(payload.encode()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
 class PackageQuery:
     objective_attr: str
     maximize: bool
@@ -94,6 +144,29 @@ class PackageQuery:
                 (table is None or self.predicate_attr in table):
             names.append(self.predicate_attr)
         return names
+
+    def signature(self) -> QuerySignature:
+        """Canonical :class:`QuerySignature` for cross-query caching.
+
+        Reordered-but-identical constraint lists produce identical
+        signatures; tightening any interval produces a signature
+        ``contained_in`` the original's.
+        """
+        rows = sorted(
+            ((ct.attr or "",
+              None if ct.avg_target is None else float(ct.avg_target),
+              float(ct.lo), float(ct.hi))
+             for ct in self.constraints),
+            key=lambda r: (r[0], -INF if r[1] is None else r[1],
+                           r[2], r[3]))
+        return QuerySignature(
+            objective_attr=self.objective_attr,
+            maximize=bool(self.maximize),
+            repeat=int(self.repeat),
+            predicate_attr=self.predicate_attr,
+            keys=tuple((a, t) for a, t, _, _ in rows),
+            los=tuple(lo for _, _, lo, _ in rows),
+            his=tuple(hi for _, _, _, hi in rows))
 
     # ------------------------------------------------------------------
     def _assemble(self, view: Dict[str, np.ndarray], n: int):

@@ -220,9 +220,86 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
 
 @dataclasses.dataclass
 class PSStats:
-    layer_sizes: list
-    lp_iters: int
-    time_s: float
+    """Cascade-level observability for one progressive_shading call
+    (attached to the returned ``PackageResult.ps_stats``)."""
+    layer_sizes: list = dataclasses.field(default_factory=list)
+    lp_iters: int = 0
+    time_s: float = 0.0
+    # warm starts that silently fell cold: map_warm_basis re-maps that
+    # came back None, plus engine-side basis validations that rejected
+    # ("warm_start_rejected" LP notes)
+    warm_rejected: int = 0
+    cache: str = ""          # "" | "package" | "exact" | "contained"
+
+
+def _count_warm_rejects(lp_res, stats: PSStats, report) -> None:
+    """Surface engine-side warm-start rejections (lp._warm_state notes)."""
+    for note in getattr(lp_res, "notes", ()) or ():
+        if "warm_start_rejected" in note:
+            stats.warm_rejected += 1
+            if report is not None:
+                report.warm_rejected += 1
+
+
+def _solve_from_cache(hier, query, table, hit, qcache, *, dr_q,
+                      ilp_kwargs, dr_aux, budget, report,
+                      stats: PSStats) -> Optional[PackageResult]:
+    """Serve a cache hit, or return None to fall back to the cold descent.
+
+    Exact hits with a stored package take the validated fast path:
+    ``check_package`` against the relation plus an objective re-compute.
+    Every other hit shortcuts to Dual Reducer over the cached layer-0
+    candidate set (the pre-prune), warm-started from the cached lp1
+    basis; the resulting LP bound must reproduce the cached bound (exact
+    hits) or respect containment monotonicity (contained hits), else the
+    hit is abandoned.  A private rng keeps the engine rng untouched so
+    an abandoned hit leaves the cold descent bit-identical to an
+    uncached solve.
+    """
+    entry = hit.entry
+    tol = 1e-6 * max(1.0, abs(entry.lp_bound))
+    if hit.exact and qcache.reuse_packages and entry.package_idx is not None:
+        idx, mult = entry.package_idx, entry.package_mult
+        if query.check_package(table, idx, mult):
+            obj = query.objective_value(table, idx, mult)
+            if abs(obj - entry.package_obj) <= \
+                    1e-6 * max(1.0, abs(entry.package_obj)):
+                if report is not None:
+                    report.cache_pruned_lps += hier.L + 1
+                stats.cache = "package"
+                return PackageResult(True, idx.copy(), mult.copy(), obj,
+                                     entry.lp_bound,
+                                     status="ok cached=package")
+        return None
+    S0 = entry.candidates(1)
+    if S0 is None or len(S0) == 0:
+        return None
+    warm = hit.warm_for_layer0(hier, query, S0)
+    res = dual_reducer(query, table, S0, q=dr_q,
+                       rng=np.random.default_rng(0),
+                       ilp_kwargs=ilp_kwargs, aux=dr_aux, warm_start=warm,
+                       budget=budget, report=report, ladder=False)
+    if not res.feasible or res.status != "ok":
+        return None
+    if hit.exact:
+        ok = abs(res.lp_obj - entry.lp_bound) <= tol
+    else:
+        # containment monotonicity: the tightened query's bound cannot
+        # beat the cached (looser) query's bound
+        ok = res.lp_obj <= entry.lp_bound + tol if query.maximize \
+            else res.lp_obj >= entry.lp_bound - tol
+        # quality gate: a pruned solve far off its own LP bound means
+        # the cached candidate set lost support this query needed
+        gap = (res.lp_obj - res.obj) if query.maximize \
+            else (res.obj - res.lp_obj)
+        ok &= gap <= qcache.gap_accept * max(1.0, abs(res.lp_obj))
+    if not ok:
+        return None
+    if report is not None:
+        report.cache_pruned_lps += hier.L
+    stats.cache = hit.kind
+    res.status = f"ok cached={hit.kind}"
+    return res
 
 
 def progressive_shading(hier: Hierarchy, query: PackageQuery,
@@ -237,7 +314,8 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
                         warm_starts: bool = True,
                         lp_solver=None,
                         budget=None, report=None,
-                        ladder: bool = True
+                        ladder: bool = True,
+                        qcache=None
                         ) -> PackageResult:
     """Algorithm 1: iterate Shading from layer L to 0, then Dual Reducer.
 
@@ -256,13 +334,49 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
     blown inside a deep hierarchy.  If Dual Reducer fails and budget
     remains, the layer-0 candidate set is rebuilt at double α from the
     layer-1 support and Dual Reducer retried (``dr_alpha_escalation``).
+
+    Cross-query cache (``qcache``: a :class:`repro.core.qcache.QCache`):
+    consult-before-descend — a hit serves a validated cached package
+    (exact) or shortcuts to Dual Reducer over the cached layer-0
+    candidate set (exact/contained); a hit that fails validation records
+    a ``cache_fallback`` rung and descends cold, consulting cached
+    per-layer bases where the candidate sets still match exactly.
+    Populate-after-solve — a clean, non-degraded cold solve stores its
+    per-layer candidate sets, LP bases and final package.
     """
     t0 = time.time()
     alpha = alpha or hier.alpha
+    stats = PSStats()
+    fp = sig = hit = None
+    if qcache is not None:
+        fp = qcache.register(hier)
+        sig = query.signature()
+        hit = qcache.lookup(fp, sig)
+        if report is not None:
+            if hit is not None:
+                report.cache_hits += 1
+            else:
+                report.cache_misses += 1
+        if hit is not None:
+            res = _solve_from_cache(hier, query, table, hit, qcache,
+                                    dr_q=dr_q, ilp_kwargs=ilp_kwargs,
+                                    dr_aux=dr_aux, budget=budget,
+                                    report=report, stats=stats)
+            if res is not None:
+                stats.time_s = time.time() - t0
+                res.ps_stats = stats
+                return res
+            qcache.stats.fallbacks += 1
+            if report is not None:
+                report.rung("cache_fallback",
+                            detail=f"{hit.kind} hit abandoned")
+    entry = hit.entry if hit is not None else None
     S = np.arange(hier.layers[hier.L].size)
     sizes = [len(S)]
     warm = None
     support = None          # previous layer's surviving support (widening)
+    art_cands: Dict[int, np.ndarray] = {}
+    art_layers: Dict[int, tuple] = {}
     for l in range(hier.L, 0, -1):
         skip = budget is not None and budget.start().exhausted()
         if skip and report is not None:
@@ -274,16 +388,42 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
                      neighbor_sampling(hier, _l, f * alpha, _s,
                                        query.objective_attr,
                                        query.maximize))
+        if warm is None and warm_starts and entry is not None:
+            # consult-before-descend: the abandoned hit's same-layer
+            # basis still warm-starts this LP when the candidate
+            # columns match exactly (warm starts never change answers)
+            state = entry.layer_warms.get(l)
+            if state is not None and np.array_equal(
+                    np.asarray(state[0]), np.asarray(S)):
+                warm = WarmStart(state[1].copy(), state[2].copy())
         S_next, lp_res, S_used, support = shading(
             hier, l, alpha, S, query, layer_solver=layer_solver,
             sampler=sampler, rng=rng, warm_start=warm, return_state=True,
             lp_solver=lp_solver, budget=budget, report=report,
             widen=widen, ladder=ladder, skip_lp=skip)
+        if lp_res is not None:
+            stats.lp_iters += int(lp_res.iters)
+            _count_warm_rejects(lp_res, stats, report)
+            if lp_res.status == OPTIMAL:
+                art_layers[l] = (S_used, lp_res.basis, lp_res.at_upper,
+                                 lp_res.obj)
+        art_cands[l] = S_next
         warm = map_warm_basis(hier, l, S_used, lp_res, S_next,
                               obj_attr=query.objective_attr) \
             if warm_starts else None
+        if warm_starts and lp_res is not None \
+                and lp_res.status == OPTIMAL and warm is None:
+            stats.warm_rejected += 1
+            if report is not None:
+                report.warm_rejected += 1
+                report.note(f"warm_map_rejected: layer {l}")
         S = S_next
         sizes.append(len(S))
+    if warm is None and warm_starts and entry is not None \
+            and entry.dr_warm is not None:
+        S0c = entry.candidates(1)
+        if S0c is not None and np.array_equal(S0c, np.asarray(S)):
+            warm = entry.dr_warm_start()
     res = dual_reducer(query, table, S, q=dr_q, rng=rng,
                        ilp_kwargs=ilp_kwargs, aux=dr_aux, warm_start=warm,
                        budget=budget, report=report, ladder=ladder)
@@ -307,5 +447,17 @@ def progressive_shading(hier: Hierarchy, query: PackageQuery,
             if res2.feasible:
                 res = res2
                 sizes[-1] = len(S_wide)
+                art_cands[1] = S_wide
+    if qcache is not None and res.feasible and res.status == "ok" \
+            and (report is None or not report.degraded):
+        # populate-after-solve: only clean, full-quality solves seed the
+        # cache (degraded/truncated artifacts would poison reuse)
+        qcache.store(fp, sig, hier=hier, cands=art_cands,
+                     layer_warms=art_layers, dr_warm=res.lp_warm,
+                     lp_bound=res.lp_obj,
+                     package=(res.idx, res.mult, res.obj))
     res.status += f" layers={sizes}"
+    stats.layer_sizes = sizes
+    stats.time_s = time.time() - t0
+    res.ps_stats = stats
     return res

@@ -56,6 +56,14 @@ def solve(A, max_iters=100):
     for it in range(max_iters):
         step(A)
 """,
+    "REPRO007": """\
+def f(qcache, key):
+    try:
+        val = compute()
+        qcache.store(key, val)
+    except Exception:
+        pass
+""",
 }
 
 
