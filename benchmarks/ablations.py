@@ -2,7 +2,6 @@
 vs random sampling, Dual Reducer auxiliary LP vs random sampling."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import ILP_KW, build_engine, emit, gap, query_for, timed
 

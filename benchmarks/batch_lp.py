@@ -1,0 +1,174 @@
+"""Batched bound-variant LP engine benchmark — acceptance instrument
+for ``repro.core.lp_batch`` (ROADMAP "batched wave LP engine").
+
+Two workloads, each a paired flight of the SAME search with the batched
+engine on and off:
+
+* **bnb** — a many-node best-bound B&B on a tight BETWEEN window
+  (thousands of nodes, every wave a flight of warm-started bound
+  variants).  ``wave_width=1`` runs the bit-compatible sequential numpy
+  path; ``wave_width=32`` solves each wave as one jitted dispatch.
+  Gate: >= 3x wall-clock speedup AND an identical final package /
+  objective on every paired flight.
+* **dr_rungs** — the Dual Reducer's auxiliary-rung flight: R shrinking
+  ``ub`` caps of one shared (c, A), all warm-started from lp1, solved
+  ``backend="np"`` vs ``backend="jax"``.  Parity is gated lane by lane
+  (status / iterations / objective / x / basis); the speedup is
+  recorded, not gated — a 12-lane flight is glue-bound on one core.
+
+Compile-cache counters are recorded (and gated) to prove the shape-class
+policy holds: class count stays bounded, no per-K recompiles.
+
+Results land in ``BENCH_batchlp.json`` at the repo root (same pattern
+as ``BENCH_cache.json``).
+
+CLI (the smoke profile is wired into CI):
+
+    python -m benchmarks.batch_lp --smoke   # ~3.5k-node tree; asserts
+    python -m benchmarks.batch_lp --full    # ~14k-node acceptance run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.ilp import solve_ilp
+from repro.core.lp import solve_lp_np
+from repro.core.lp_batch import (batch_cache_stats, batch_stats,
+                                 solve_lp_batch)
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_batchlp.json"
+
+WAVE_W = 64
+ILP_KW = dict(max_nodes=50_000, time_limit_s=600)
+
+
+def _instance(seed: int, n: int, width: float):
+    """Tight BETWEEN window over one synthetic gift-basket table: count
+    in [15, 45], value sum in 420 +/- width.  Narrower windows make the
+    LP face miss the integer lattice harder -> more B&B nodes."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(14.0, 1.5, n)
+    c = np.abs(rng.normal(1.0, 0.5, n))
+    A = np.vstack([np.ones(n), vals])
+    bl = np.array([15.0, 420.0 - width])
+    bu = np.array([45.0, 420.0 + width])
+    return c, A, bl, bu
+
+
+def _best_of(fn, reps: int):
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _bnb(full: bool, reps: int) -> dict:
+    seed, n, width = (42, 150, 0.02) if full else (42, 150, 0.05)
+    c, A, bl, bu = _instance(seed, n, width)
+    ub = np.ones(n)
+
+    def solve(W):
+        return solve_ilp(c, A, bl, bu, ub, wave_width=W, **ILP_KW)
+
+    solve(1)                        # warm numpy caches
+    t_seq, r_seq = _best_of(lambda: solve(1), reps)
+    d0 = batch_stats()["dispatches"]
+    solve(WAVE_W)                   # compile the wave's shape classes
+    t_bat, r_bat = _best_of(lambda: solve(WAVE_W), reps)
+    dispatches = batch_stats()["dispatches"] - d0
+
+    assert r_seq.feasible and r_bat.feasible, (r_seq.status, r_bat.status)
+    # paired-flight parity: identical final package and objective
+    assert np.array_equal(r_bat.x, r_seq.x), "B&B package parity violated"
+    assert abs(r_bat.obj - r_seq.obj) < 1e-9, (r_bat.obj, r_seq.obj)
+    speedup = t_seq / max(t_bat, 1e-9)
+    assert speedup >= 3.0, \
+        f"batched wave speedup {speedup:.2f}x < 3x gate"
+    print(f"bnb,{t_bat * 1e6:.0f},speedup={speedup:.2f}x "
+          f"nodes={r_seq.nodes} seq={t_seq:.3f}s", flush=True)
+    return {"n": n, "width": width, "wave_width": WAVE_W,
+            "nodes": r_seq.nodes, "seq_s": round(t_seq, 4),
+            "batched_s": round(t_bat, 4), "speedup": round(speedup, 2),
+            "dispatches": dispatches, "parity": True}
+
+
+def _dr_rungs(reps: int) -> dict:
+    n, rungs, q = 300, 12, 25.0
+    c, A, bl, bu = _instance(9, n, 2.0)
+    ub = np.full(n, 3.0)
+    lp1 = solve_lp_np(c, A, bl, bu, ub)
+    assert lp1.status == 0, lp1.status
+    E = float(np.sum(lp1.x))
+    ub_variants = [np.minimum(ub, max(E / (q * 2 ** j), 1e-9))
+                   for j in range(rungs)]
+
+    def flight(backend):
+        return solve_lp_batch(c, A, bl, bu, ub_variants,
+                              warm_starts=[lp1] * rungs, backend=backend)
+
+    ref = flight("np")
+    t_np, _ = _best_of(lambda: flight("np"), reps)
+    flight("jax")                   # compile
+    t_jax, got = _best_of(lambda: flight("jax"), reps)
+    for k, (a, b) in enumerate(zip(ref, got)):
+        assert a.status == b.status and a.iters == b.iters, \
+            f"rung {k}: status/iters diverge"
+        assert np.array_equal(a.x, b.x), f"rung {k}: x diverges"
+        assert np.array_equal(a.basis, b.basis), f"rung {k}: basis"
+        assert abs(a.obj - b.obj) < 1e-12, f"rung {k}: obj"
+    speedup = t_np / max(t_jax, 1e-9)
+    print(f"dr_rungs,{t_jax * 1e6:.0f},speedup={speedup:.2f}x "
+          f"rungs={rungs}", flush=True)
+    return {"n": n, "rungs": rungs, "np_s": round(t_np, 5),
+            "jax_s": round(t_jax, 5), "speedup": round(speedup, 2),
+            "parity": True}
+
+
+def run(full: bool = False) -> dict:
+    # smoke's tree is ~4x smaller, so its paired timings see more
+    # relative noise: take best-of-5 there to keep the 3x gate stable
+    reps = 3 if full else 5
+    entry = {"full": bool(full)}
+    entry["bnb"] = _bnb(full, reps)
+    entry["dr_rungs"] = _dr_rungs(reps)
+
+    cache = batch_cache_stats()
+    stats = batch_stats()
+    # bounded shape classes: every compile landed in the LRU without
+    # churn (evictions would mean the class policy degenerated into
+    # per-flight recompiles)
+    assert cache["size"] <= cache["maxsize"], cache
+    assert cache["evictions"] == 0, cache
+    entry["compile_cache"] = cache
+    entry["dispatch_stats"] = stats
+    print(f"compile_cache,0,classes={cache['size']} "
+          f"hits={cache['hits']} misses={cache['misses']}", flush=True)
+
+    data = {}
+    if BENCH_PATH.exists():
+        data = json.loads(BENCH_PATH.read_text())
+    data["smoke" if not full else "full"] = entry
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"# wrote {BENCH_PATH}", flush=True)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast profile (CI gate)")
+    ap.add_argument("--full", action="store_true",
+                    help="many-node acceptance run")
+    args = ap.parse_args()
+    run(full=args.full and not args.smoke)
+
+
+if __name__ == "__main__":
+    main()

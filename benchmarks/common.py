@@ -2,13 +2,13 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, Iterable, List
+from typing import List
 
 import numpy as np
 
 from repro.core.engine import PackageQueryEngine
 from repro.core.hardness import TEMPLATES, column_stats, instantiate
-from repro.data.synth_tables import make_table, subsample
+from repro.data.synth_tables import make_table
 
 ROWS: List[str] = []
 

@@ -22,7 +22,6 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core import partitioner
 from repro.core.dlv import dlv_heap, dlv_rounds, ratio_score
 from repro.core.hierarchy import _min_gap
 from repro.core.kdtree import kdtree_partition

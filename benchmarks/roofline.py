@@ -15,7 +15,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, Optional
 
 from benchmarks.common import emit
 from repro.configs import SHAPES, get_config

@@ -8,7 +8,6 @@ core); --full runs the paper-scale sweeps.
 """
 import argparse
 import os
-import sys
 import time
 
 # Give the CPU host virtual devices BEFORE jax first initializes so the
@@ -18,7 +17,7 @@ from repro.hostdev import ensure_host_devices
 
 ensure_host_devices()
 
-from benchmarks import (ablations, analysis_bench, cache_bench,
+from benchmarks import (ablations, analysis_bench, batch_lp, cache_bench,
                         dual_reducer_bench, grid, infeasibility,
                         partitioning, pds_scaling, ratio_score, roofline,
                         scaling, warm_start)
@@ -35,6 +34,7 @@ MODULES = {
     "miniexp7_8_dual_reducer": dual_reducer_bench,
     "appc_warm_start": warm_start,
     "cache": cache_bench,
+    "batch_lp": batch_lp,
     "roofline": roofline,
     "analysis": analysis_bench,
 }

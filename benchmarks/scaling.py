@@ -7,7 +7,6 @@ SR degrades, direct ILP blows up.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import ILP_KW, build_engine, emit, gap, query_for, timed
 

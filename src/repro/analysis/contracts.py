@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -458,6 +458,53 @@ def check_lp_twin(m: int = 4, N: int = 64, max_iters: int = 32
     return HotPathResult(name, time.time() - t0, rec, viol)
 
 
+def check_lp_batch(m: int = 4, n: int = 16, K: int = 4,
+                   max_iters: int = 16) -> HotPathResult:
+    """The batched bound-variant LP engine (``lp_batch._batched_core``):
+    a single-device batch, not an SPMD program, so it must lower with
+    ZERO collectives (IRC001), no host callbacks/transfers inside the
+    vmapped pivot while-loop (IRC003), and f32 operands must not
+    silently promote to f64 (IRC005).  Shapes are one (m, n, K) shape
+    class; the while trip bound must reflect the static per-lane cap."""
+    from repro.core.lp_batch import _batched_core
+    t0 = time.time()
+    N = n + m
+    name = f"lp_batch.core@m{m}_n{n}_K{K}"
+    viol: List[Violation] = []
+    core = _batched_core(m, n, K, max_iters, 64)
+
+    def abs_args(ft):
+        f = lambda shape, dt=ft: jax.ShapeDtypeStruct(shape, dt)
+        # single packed operand: l | u | tol | basis0 | at_upper0 |
+        # valid | pivot_cap — see _batched_core
+        return (f((N,)), f((m, N)), f((K, 3 * N + m + 3)))
+
+    compiled = core.lower(*abs_args(_F64)).compile()
+    hlo = compiled.as_text()
+    jaxpr = _jaxpr_of(core, *abs_args(_F64))
+    jaxpr32 = _jaxpr_of(core, *abs_args(jnp.float32))
+    jp_coll = collective_prims(jaxpr)
+    if jp_coll:
+        viol.append(Violation(
+            "IRC001", name, 0,
+            f"collective primitives in the batched LP core: "
+            f"{sorted({c for c, _ in jp_coll})} — the wave solver is a "
+            "single-device vmap, not an SPMD program"))
+    viol += _hlo_host_violations(name, hlo)
+    viol += _callback_violations(name, jaxpr)
+    f64s = f64_introductions(jaxpr32)
+    if f64s:
+        viol.append(Violation(
+            "IRC005", name, 0,
+            f"f32 inputs produce f64 intermediates via {sorted(set(f64s))}"
+            ))
+    trips = hlo_analysis.while_trip_counts(hlo)
+    rec = {"hot_path": name, "m": m, "n": n, "K": K,
+           "while_trip_counts": {k: int(v) for k, v in trips.items()},
+           "max_trip": int(max(trips.values())) if trips else 0}
+    return HotPathResult(name, time.time() - t0, rec, viol)
+
+
 def check_kernel_pricing(m: int = 4, n: int = 4096) -> HotPathResult:
     """The Pallas pricing kernel, jaxpr level only: interpret-mode Pallas
     may legitimately lower to host callbacks in HLO, so the contract here
@@ -603,6 +650,7 @@ def run_contracts(grid: str = "host"
             results.append(check_update_step(mesh, m, n))
             results.append(check_refresh_step(mesh, m, n))
     results.append(check_lp_twin())
+    results.append(check_lp_batch())
     results.append(check_kernel_pricing())
     results.append(check_kernel_segstats())
     results.append(check_split_descent())

@@ -13,8 +13,7 @@ Shapes (the per-arch input-shape set from the brief) are global:
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 VOCAB_PAD_MULTIPLE = 128  # vocab padded so TP over 16-way model axis divides
 

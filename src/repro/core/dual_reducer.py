@@ -16,13 +16,14 @@ from the last Shading layer's basis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core import ilp as ilp_mod
 from repro.core.lp import INFEASIBLE, OPTIMAL, LPResult, WarmStart, \
     fill_warm_basis, solve_lp_np
+from repro.core.lp_batch import solve_lp_batch
 from repro.core.paql import PackageQuery
 
 
@@ -71,12 +72,22 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
                  ilp_kwargs: Optional[dict] = None,
                  aux: str = "lp", warm_start=None,
                  budget=None, report=None,
-                 ladder: bool = True) -> PackageResult:
+                 ladder: bool = True, aux_rungs: int = 1,
+                 batch_backend: str = "auto") -> PackageResult:
     """aux: 'lp' (paper's auxiliary LP, line 4-5) | 'random' (Mini-Exp 4
     ablation: random sample of ~q tuples instead).  warm_start seeds the
     first LP (see module docstring).  ``table`` may be a dict of arrays or
     a Relation: only the <= |S| candidate rows are ever gathered (the
     out-of-core contract — S carries tuple ids, never tuples).
+
+    ``aux_rungs=R`` solves R auxiliary LPs in ONE ``solve_lp_batch``
+    dispatch — bound-variants ``ub_j = min(ub, E/(q * 2^j))`` of the
+    same (c, A), all warm-started from lp1.  Rung 0 is the paper's
+    auxiliary LP; rungs j >= 1 are the supports the exponential
+    fallback would otherwise have to re-solve for after doubling q, so
+    each fallback round widens ``sel`` from a precomputed rung before
+    falling back to random sampling.  ``aux_rungs=1`` is byte-identical
+    to the classic single auxiliary solve.
 
     Guard integration: ``budget`` (guard.SolveBudget) is threaded through
     every LP and the sub-ILPs; ``report`` (guard.SolveReport) accumulates
@@ -120,18 +131,31 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
 
     tol = 1e-9
     support = lp1.x > tol
+    aux_supports = []          # precomputed widening rungs (fallback rounds)
     if aux == "random":
         support |= rng.random(n) < q / max(n, 1)
     else:
         E = float(np.sum(lp1.x))
-        ub_aux = np.minimum(ub, max(E / max(q, 1), 1e-9))
-        # same c/A, only tighter upper bounds: textbook dual warm start
-        lp2 = solve_lp_np(c, A, bl, bu, ub_aux, max_iters=max_lp_iters,
-                          warm_start=lp1, budget=budget, monitor=monitor)
+        rungs = max(1, int(aux_rungs))
+        # rung j caps every variable at E/(q*2^j): the support the
+        # exponential fallback would need after j doublings of q.  All
+        # rungs are bound-variants of one (c, A) warm-started from lp1:
+        # one batched dispatch (sequential solve_lp_np when rungs == 1).
+        ub_variants = [np.minimum(ub, max(E / (max(q, 1) * 2 ** j), 1e-9))
+                       for j in range(rungs)]
+        auxs = solve_lp_batch(c, A, bl, bu, ub_variants,
+                              max_iters=max_lp_iters,
+                              warm_starts=[lp1] * rungs, budget=budget,
+                              monitor=monitor, backend=batch_backend)
         if report is not None:
-            report.absorb_lp(lp2)
-        if lp2.status == OPTIMAL:
-            support |= lp2.x > tol
+            report.absorb_batch(auxs)
+        for jr, lp2 in enumerate(auxs):
+            if lp2.status != OPTIMAL:
+                continue
+            if jr == 0:
+                support |= lp2.x > tol
+            else:
+                aux_supports.append(lp2.x > tol)
     sel = np.flatnonzero(support)
 
     def _degraded_rounding(n_sel: int, fallbacks: int, why: str):
@@ -181,6 +205,10 @@ def dual_reducer(query: PackageQuery, table, S: np.ndarray, *, q: int = 500,
         # fallback: double q, sample additional tuples uniformly (lines 9-14)
         fallbacks += 1
         q = min(2 * max(q, 1), n)
+        if aux_supports:
+            # a precomputed aux rung already solved this q-doubling:
+            # widen deterministically before the random top-up
+            sel = np.union1d(sel, np.flatnonzero(aux_supports.pop(0)))
         remaining = np.setdiff1d(np.arange(n), sel, assume_unique=False)
         need = min(max(q - len(sel), 0), len(remaining))
         if need > 0:

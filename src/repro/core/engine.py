@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.core import guard
 from repro.core import ilp as ilp_mod
-from repro.core.dual_reducer import PackageResult, dual_reducer
+from repro.core.dual_reducer import PackageResult
 from repro.core.hierarchy import Hierarchy
 from repro.core.lp import OPTIMAL, solve_lp_np
 from repro.core.paql import PackageQuery

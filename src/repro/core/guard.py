@@ -208,6 +208,7 @@ class SolveReport:
     lp_calls: int = 0
     lp_pivots: int = 0
     lp_truncated: int = 0     # LPs that hit an iteration/pivot/time cap
+    lp_batches: int = 0       # batched dispatches (core.lp_batch flights)
     ilp_nodes: int = 0
     fault_retries: int = 0
     wall_s: float = 0.0
@@ -238,6 +239,13 @@ class SolveReport:
         # status codes: 0 OPTIMAL, 1 ITER_LIMIT, 2 INFEASIBLE, 3 BUDGET
         if getattr(res, "status", 0) in (1, 3):
             self.lp_truncated += 1
+
+    def absorb_batch(self, results) -> None:
+        """Account one ``solve_lp_batch`` flight (a sequence of
+        LPResults solved as a single dispatch)."""
+        self.lp_batches += 1
+        for res in results:
+            self.absorb_lp(res)
 
     def finalize(self, feasible: bool) -> "SolveReport":
         """Derive the final status from what happened (ERROR sticks)."""

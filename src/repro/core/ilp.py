@@ -26,6 +26,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.lp import solve_lp_np, BUDGET, OPTIMAL, INFEASIBLE
+from repro.core.lp_batch import solve_lp_batch
 
 ILP_OPTIMAL, ILP_FEASIBLE, ILP_INFEASIBLE, ILP_LIMIT = 0, 1, 2, 3
 
@@ -53,7 +54,7 @@ def _round_feasible(x, c, A, bl, bu, lb, ub, tol):
 
 
 def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400,
-          warm_start=None, budget=None):
+          warm_start=None, budget=None, probe_batch: bool = False):
     """LP-guided fractional diving.
 
     Package-query LPs have at most m fractional (basic) variables, so
@@ -61,6 +62,10 @@ def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400,
     re-solving converges quickly to an integer-feasible point when one is
     near the LP face — the workhorse incumbent finder for tight BETWEEN
     windows where naive rounding fails.
+
+    ``probe_batch=True`` solves both branching probes (pure bound
+    variants of the current dive LP) as one ``solve_lp_batch`` dispatch
+    and keeps the first OPTIMAL one in today's preference order.
     """
     lbd, ubd = lb.copy(), ub.copy()
     warm = warm_start
@@ -80,12 +85,23 @@ def _dive(c, A, bl, bu, lb, ub, tol, max_lp_iters, max_steps=400,
             return None, np.inf
         r = np.round(x[j])
         # try nearest integer first, fall back to the other side
+        variants = []
         for v in (r, np.floor(x[j]) if r > x[j] else np.ceil(x[j])):
             v = float(np.clip(v, lbd[j], ubd[j]))
             lb2, ub2 = lbd.copy(), ubd.copy()
             lb2[j] = ub2[j] = v
-            probe = solve_lp_np(c, A, bl, bu, ub2, lb=lb2,
-                                max_iters=max_lp_iters, warm_start=warm)
+            variants.append((lb2, ub2))
+        if probe_batch:
+            probes = solve_lp_batch(
+                c, A, bl, bu, [vv[1] for vv in variants],
+                [vv[0] for vv in variants], max_iters=max_lp_iters,
+                warm_starts=[warm] * len(variants))
+        else:
+            probes = None
+        for i, (lb2, ub2) in enumerate(variants):
+            probe = probes[i] if probes is not None else solve_lp_np(
+                c, A, bl, bu, ub2, lb=lb2, max_iters=max_lp_iters,
+                warm_start=warm)
             if probe.status == OPTIMAL:
                 lbd, ubd = lb2, ub2
                 warm = probe
@@ -215,7 +231,8 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
               max_nodes: int = 5000, tol: float = 1e-6,
               time_limit_s: float = 60.0, max_lp_iters: int = 8000,
               warm_start=None, warm_nodes: bool = True,
-              budget=None, monitor=None) -> ILPResult:
+              budget=None, monitor=None, wave_width: int = 1,
+              batch_backend: Optional[str] = None) -> ILPResult:
     """warm_nodes=False disables node-LP warm starting (benchmark knob).
 
     ``budget=`` (a ``guard.SolveBudget``) clamps the node/time limits to
@@ -223,6 +240,17 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     budget, and threads the pivot budget through the root/node/heuristic
     LPs — a budget-exhausted search returns ILP_LIMIT (with the incumbent
     if one exists) instead of running past the deadline.
+
+    ``wave_width=W`` explores the frontier in waves: the W best-bound
+    nodes are popped together and their child LPs — pure bound-variants
+    of one shared ``(c, A)``, each warm-started from its parent — are
+    solved as ONE ``solve_lp_batch`` dispatch.  ``W=1`` keeps today's
+    one-node-at-a-time loop bit-identical (the batch engine degrades to
+    the same sequential ``solve_lp_np`` calls); larger W trades a few
+    extra node expansions (children of wave-mates can't prune each
+    other before solving) for one dispatch per wave.  ``batch_backend``
+    overrides the engine choice (default: ``"np"`` for W=1, ``"auto"``
+    otherwise).
     """
     c = np.asarray(c, np.float64)
     A = np.atleast_2d(np.asarray(A, np.float64))
@@ -280,7 +308,8 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     if best_x is None:
         best_x, best_obj = _dive(c, A, bl, bu, lb0, ub0, tol, max_lp_iters,
                                  max_steps=4 * m + 8, warm_start=root,
-                                 budget=budget)
+                                 budget=budget,
+                                 probe_batch=wave_width > 1)
     if best_x is None:
         best_x, best_obj = _feasibility_pump(c, A, bl, bu, lb0, ub0, tol,
                                              max_lp_iters, warm_start=root,
@@ -297,53 +326,92 @@ def solve_ilp(c, A, bl, bu, ub, *, lb: Optional[np.ndarray] = None,
     nodes = 0
     t0 = time.time()
     status = ILP_OPTIMAL
+    wave_width = max(1, int(wave_width))
+    if batch_backend is None:
+        batch_backend = "np" if wave_width == 1 else "auto"
     while heap:
-        if nodes >= max_nodes or (time.time() - t0) > time_limit_s or \
-                (budget is not None and budget.exhausted()):
+        # ---- gather one frontier wave: up to W best-bound expansions ----
+        wave_specs = []       # (lb2, ub2, parent warm-start)
+        expanded = 0
+        limit = False
+        while heap and expanded < wave_width:
+            if nodes >= max_nodes or (time.time() - t0) > time_limit_s or \
+                    (budget is not None and budget.exhausted()):
+                limit = True
+                break
+            bound, _, lbn, ubn, xlp, node_warm = heapq.heappop(heap)
+            if bound >= best_obj - 1e-9:
+                continue
+            nodes += 1
+            if budget is not None:
+                budget.charge_nodes(1)
+            frac = np.abs(xlp - np.round(xlp))
+            j = int(np.argmax(frac))
+            if frac[j] < tol:
+                # integral LP solution: new incumbent
+                xi = np.round(xlp)
+                obj = float(c @ xi)
+                if obj < best_obj:
+                    best_obj, best_x = obj, xi
+                continue
+            expanded += 1
+            fl = np.floor(xlp[j])
+            for lo_j, hi_j in ((lbn[j], fl), (fl + 1, ubn[j])):
+                if lo_j > hi_j:
+                    continue
+                lb2, ub2 = lbn.copy(), ubn.copy()
+                lb2[j], ub2[j] = lo_j, hi_j
+                # child differs from parent in one variable's bounds
+                # only: warm-start the dual simplex from the parent basis
+                wave_specs.append(
+                    (lb2, ub2, node_warm if warm_nodes else None))
+        if limit and not wave_specs:
             status = ILP_LIMIT
             break
-        bound, _, lbn, ubn, xlp, node_warm = heapq.heappop(heap)
-        if bound >= best_obj - 1e-9:
-            continue
-        nodes += 1
-        if budget is not None:
-            budget.charge_nodes(1)
-        frac = np.abs(xlp - np.round(xlp))
-        j = int(np.argmax(frac))
-        if frac[j] < tol:
-            # integral LP solution: new incumbent
-            xi = np.round(xlp)
-            obj = float(c @ xi)
-            if obj < best_obj:
-                best_obj, best_x = obj, xi
-            continue
-        fl = np.floor(xlp[j])
-        for lo_j, hi_j in ((lbn[j], fl), (fl + 1, ubn[j])):
-            if lo_j > hi_j:
-                continue
-            lb2, ub2 = lbn.copy(), ubn.copy()
-            lb2[j], ub2[j] = lo_j, hi_j
-            # child differs from parent in one variable's bounds only:
-            # warm-start the dual simplex from the parent's basis
-            res = solve_lp_np(c, A, bl, bu, ub2, lb=lb2,
-                              max_iters=max_lp_iters,
-                              warm_start=node_warm if warm_nodes else None,
-                              budget=budget, monitor=monitor)
-            lp_iters += res.iters
-            if res.status == INFEASIBLE:
-                continue
-            if res.status == BUDGET:
-                # child bound is unusable and the budget is gone: the
-                # search is incomplete, never claim optimality
-                status = ILP_LIMIT
-                continue
-            if res.obj >= best_obj - 1e-9:
-                continue
-            xi, obj = _round_feasible(res.x, c, A, bl, bu, lb2, ub2, tol)
-            if obj < best_obj:
-                best_obj, best_x = obj, xi
-            heapq.heappush(heap, (res.obj, next(counter), lb2, ub2, res.x,
-                                  res.warm))
+        if wave_specs:
+            # the whole wave's children are bound-variants of one shared
+            # (c, A): one batched dispatch (sequential np loop at W=1)
+            ress = solve_lp_batch(
+                c, A, bl, bu, [s[1] for s in wave_specs],
+                [s[0] for s in wave_specs], max_iters=max_lp_iters,
+                warm_starts=[s[2] for s in wave_specs], budget=budget,
+                monitor=monitor, backend=batch_backend)
+            # vectorized _round_feasible over the wave: one (K, n)
+            # round/clip and one matmul per wave instead of per child —
+            # acceptance stays sequential (best_obj updates prune later
+            # children exactly as the per-child loop did)
+            live = [i for i, r in enumerate(ress)
+                    if r.status not in (INFEASIBLE, BUDGET)]
+            if live:
+                XI = np.clip(
+                    np.round(np.stack([ress[i].x for i in live])),
+                    np.stack([wave_specs[i][0] for i in live]),
+                    np.stack([wave_specs[i][1] for i in live]))
+                ACT = XI @ A.T
+                r_feas = (np.all(ACT >= bl - tol, axis=1)
+                          & np.all(ACT <= bu + tol, axis=1))
+                r_obj = XI @ c
+            ri = {k: j for j, k in enumerate(live)}
+            for i, ((lb2, ub2, _), res) in enumerate(zip(wave_specs,
+                                                         ress)):
+                lp_iters += res.iters
+                if res.status == INFEASIBLE:
+                    continue
+                if res.status == BUDGET:
+                    # child bound is unusable and the budget is gone: the
+                    # search is incomplete, never claim optimality
+                    status = ILP_LIMIT
+                    continue
+                if res.obj >= best_obj - 1e-9:
+                    continue
+                j = ri[i]
+                if r_feas[j] and r_obj[j] < best_obj:
+                    best_obj, best_x = float(r_obj[j]), XI[j]
+                heapq.heappush(heap, (res.obj, next(counter), lb2, ub2,
+                                      res.x, res.warm))
+        if limit:
+            status = ILP_LIMIT
+            break
 
     if best_x is None:
         st = ILP_INFEASIBLE if status == ILP_OPTIMAL else ILP_LIMIT

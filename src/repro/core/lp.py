@@ -468,176 +468,289 @@ import jax.numpy as jnp
 from functools import partial
 
 
+def _refreshed(cf, A, l, u, basis, in_basis, at_upper):
+    """Full refactorization of the revised-simplex factor state.  Shared
+    by the single-instance jitted twin and the batched bound-variant
+    engine (``repro.core.lp_batch``), which vmaps it over instances."""
+    Binv = jnp.linalg.inv(A[:, basis])
+    # NOTE: masked selects, not ``.at[basis].set`` scatters — a vmapped
+    # scatter lowers to a K*m-trip sequential loop on CPU; ``in_basis``
+    # is the exact membership mask of ``basis`` by invariant
+    xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
+    xB = -Binv @ (A @ xN)
+    y = Binv.T @ cf[basis]
+    d = jnp.where(in_basis, 0.0, cf - A.T @ y)
+    return Binv, xB, d, y
+
+
+def _init_pivot_state(cf, A, basis0, at_upper0, refactor_every):
+    """Loop-carried state tuple for ``_pivot_iter``.  ``since`` starts at
+    ``refactor_every`` so the first iteration factorizes from the basis,
+    cold and warm alike."""
+    m = A.shape[0]
+    N = A.shape[1]
+    in_basis0 = jnp.any(jnp.arange(N) == basis0[:, None], axis=0)
+    at_upper0 = at_upper0 & ~in_basis0
+    return (basis0, in_basis0, at_upper0, jnp.eye(m, dtype=A.dtype),
+            jnp.zeros(m, A.dtype), cf, jnp.zeros(m, A.dtype),
+            jnp.int32(0), jnp.bool_(False), jnp.int32(0), jnp.int32(0),
+            jnp.int32(ITER_LIMIT), jnp.int32(0),
+            jnp.int32(refactor_every))
+
+
+# state-tuple field positions shared with repro.core.lp_batch
+_STATE_STATUS = 11
+_STATE_IT = 12
+
+
+def _factor_refresh(cf, A, l, u, state):
+    """Unconditional refactorization of the loop-carried state — the
+    shared body of both refresh sites in ``_pivot_iter``.  The batched
+    engine (``repro.core.lp_batch``) calls this directly under a
+    batch-level ``lax.cond`` so the O(m^3) inverse only lowers when some
+    lane actually needs it (a vmapped per-lane cond would execute it for
+    every lane on every iteration)."""
+    (basis, in_basis, at_upper, Binv, xB, d, y, stall, bland, n_bland,
+     n_drift, status, it, since) = state
+    Binv, xB, d, y = _refreshed(cf, A, l, u, basis, in_basis, at_upper)
+    return (basis, in_basis, at_upper, Binv, xB, d, y, stall, bland,
+            n_bland, n_drift, status, it, jnp.int32(0))
+
+
+def _drift_gate(A, refactor_every, state):
+    """Numerical-health check: residual drift of the rank-1-updated
+    inverse (or the periodic cadence) demands a refactorization.  The
+    m×m residual costs nothing next to the O(mn) pricing pass.  Returns
+    ``(state with the drift event counted, need_refresh)``."""
+    (basis, in_basis, at_upper, Binv, xB, d, y, stall, bland, n_bland,
+     n_drift, status, it, since) = state
+    m = A.shape[0]
+    resid = jnp.abs(Binv @ A[:, basis]
+                    - jnp.eye(m, dtype=A.dtype)).max()
+    drift = (resid > DRIFT_TOL) & (since > 0)
+    n_drift = n_drift + drift.astype(jnp.int32)
+    state = (basis, in_basis, at_upper, Binv, xB, d, y, stall, bland,
+             n_bland, n_drift, status, it, since)
+    return state, drift | (since >= refactor_every)
+
+
+def _optimal_suspect_gate(l, u, tol, state):
+    """Optimality suspected on stale factors -> the caller must
+    refactorize and re-check before declaring."""
+    basis, xB, since = state[0], state[4], state[13]
+    lB, uB = l[basis], u[basis]
+    viol = jnp.maximum(lB - xB, xB - uB)
+    return (viol[jnp.argmax(viol)] <= tol) & (since > 0)
+
+
+def _pivot_iter(cf, A, l, u, tol, refactor_every, state):
+    """One revised-dual-simplex pivot — the jitted twin's while body.
+
+    Pure function of ``(cf, A, l, u, tol)`` and the loop-carried
+    ``state`` tuple (see ``_init_pivot_state``).  ``repro.core.lp_batch``
+    runs the same pieces (``_drift_gate`` / ``_factor_refresh`` /
+    ``_pivot_core``) vmapped over K bound-variants ``(l, u, tol, state)``
+    of one shared ``(cf, A)`` with the refresh conds hoisted to batch
+    level, so any change to the pivot rule here applies to both engines
+    identically.
+    """
+    state, need = _drift_gate(A, refactor_every, state)
+    # repro: allow[REPRO001] each refresh lambda below is a fresh
+    # function identity per trace of this body capturing the same
+    # (cf, A, l, u), so the identity-cached branch jaxpr is correct
+    state = jax.lax.cond(
+        need, lambda s: _factor_refresh(cf, A, l, u, s), lambda s: s,
+        state)
+    # repro: allow[REPRO001] fresh lambda identity, same captures
+    state = jax.lax.cond(
+        _optimal_suspect_gate(l, u, tol, state),
+        lambda s: _factor_refresh(cf, A, l, u, s), lambda s: s, state)
+    return _pivot_core(cf, A, l, u, tol, refactor_every, state)
+
+
+def _pivot_core(cf, A, l, u, tol, refactor_every, state, active=None):
+    """The pivot proper: BFRT column selection + Sherman–Morrison
+    update, on factors the caller has already refreshed as needed.
+
+    ``active`` (batched engine only): a scalar bool tracer; when False
+    the WHOLE state passes through unchanged.  The array fields are
+    already gated by ``do_pivot``, so freezing a lane costs a handful
+    of scalar selects instead of the full 14-array tree-select the
+    batched loop body used to pay per trip."""
+    (basis, in_basis, at_upper, Binv, xB, d, y, stall, bland, n_bland,
+     n_drift, status, it, since) = state
+    N = A.shape[1]
+    lB, uB = l[basis], u[basis]
+    viol_lo = lB - xB
+    viol_hi = xB - uB
+    viol = jnp.maximum(viol_lo, viol_hi)
+    r_max = jnp.argmax(viol)
+    done = viol[r_max] <= tol
+    # Bland mode: violated row with the smallest BASIC VARIABLE index
+    # (row position alone does not carry the finiteness guarantee)
+    r_bland = jnp.argmin(jnp.where(viol > tol, basis, N))
+    r = jnp.where(bland, r_bland, r_max)
+
+    above = viol_hi[r] >= viol_lo[r]
+    delta = jnp.where(above, xB[r] - uB[r], xB[r] - lB[r])
+    s = jnp.where(delta > 0, 1.0, -1.0)
+    rho = Binv[r]
+    alpha = rho @ A                 # pricing: the single O(mn) sweep
+
+    sa = s * alpha
+    elig = (~in_basis) & (
+        ((~at_upper) & (sa > tol)) | (at_upper & (sa < -tol)))
+    any_elig = jnp.any(elig)
+    ratio = jnp.where(elig,
+                      jnp.maximum(d / jnp.where(jnp.abs(sa) > tol, sa, 1.0),
+                                  0.0), jnp.inf)
+    width = u - l
+    flip_cost = jnp.where(elig, jnp.abs(alpha) * width, 0.0)
+
+    order = jnp.argsort(ratio)
+    csum_all = jnp.cumsum(flip_cost[order])
+    flip_budget = jnp.abs(delta)
+    elig_sorted = elig[order]
+    crossed = (csum_all >= flip_budget - 1e-12) & elig_sorted
+    cross_pos = jnp.argmax(crossed)          # first True (0 if none)
+    # Bland mode: smallest-index min-ratio column, no bound flips
+    rmin = jnp.min(ratio)
+    q_bland = jnp.argmax(elig & (ratio <= rmin + 1e-12))
+    has_cross = jnp.any(crossed) | (bland & any_elig)
+    q = jnp.where(bland, q_bland, order[cross_pos])
+    # only flip breakpoints strictly before the crossing in sorted
+    # order; argsort is stable, so "sorted before q" is exactly the
+    # lexicographic compare on (ratio, index) — no inverse-permutation
+    # scatter (which lowers to a K*N-trip sequential loop when vmapped)
+    iN = jnp.arange(N)
+    flip_mask = (elig & ~bland
+                 & ((ratio < ratio[q])
+                    | ((ratio == ratio[q]) & (iN < q))))
+
+    stale = since > 0
+    w = Binv @ A[:, q]
+    # numerically unsafe pivot (possible only on drifted factors;
+    # fresh factors guarantee |w[r]| = |alpha_q| > tol) -> no pivot,
+    # force a refactorize-and-retry like the numpy twin
+    unsafe = jnp.abs(w[r]) < 1e-11
+    no_pivot = ~any_elig | ~has_cross
+    # infeasibility on stale factors: force a refactorize-and-retry
+    # instead of declaring; on fresh factors it is genuine
+    new_status = jnp.where(done, OPTIMAL,
+                           jnp.where(no_pivot & ~stale, INFEASIBLE,
+                                     ITER_LIMIT)).astype(jnp.int32)
+    do_pivot = (new_status == ITER_LIMIT) & ~no_pivot & ~unsafe
+    if active is not None:
+        do_pivot = do_pivot & active
+
+    # ---- incremental pivot ----
+    # single-index updates are one-hot selects, not ``.at[i].set``
+    # scatters: a vmapped 1-element scatter lowers to a K-trip
+    # sequential loop on CPU, ~10 of which used to dominate the batched
+    # engine's per-iteration cost
+    leave = basis[r]
+    im = jnp.arange(Binv.shape[0])
+    dxN = jnp.where(flip_mask,
+                    jnp.where(at_upper, l - u, u - l), 0.0)
+    xB2 = xB - Binv @ (A @ dxN)     # flip absorption (masked matvec)
+    at_upper_f = at_upper ^ flip_mask
+    wr = jnp.where(unsafe, 1.0, w[r])
+    target = jnp.where(above, uB[r], lB[r])
+    t = (xB2[r] - target) / wr
+    xq = jnp.where(at_upper_f[q], u[q], l[q])
+    xB3 = jnp.where(im == r, xq + t, xB2 - t * w)
+    theta = d[q] / wr
+    d2 = jnp.where(iN == leave, -theta,
+                   jnp.where(iN == q, 0.0, d - theta * alpha))
+    y2 = y + theta * rho
+    Binv_r = Binv[r] / wr
+    Binv2 = jnp.where((im == r)[:, None], Binv_r[None, :],
+                      Binv - jnp.outer(w, Binv_r))
+    at_upper2 = jnp.where(iN == q, False,
+                          jnp.where(iN == leave, above, at_upper_f))
+    in_basis2 = jnp.where(iN == q, True,
+                          jnp.where(iN == leave, False, in_basis))
+    basis2 = jnp.where(im == r, q.astype(basis.dtype), basis)
+
+    basis = jnp.where(do_pivot, basis2, basis)
+    in_basis = jnp.where(do_pivot, in_basis2, in_basis)
+    at_upper = jnp.where(do_pivot, at_upper2, at_upper)
+    Binv = jnp.where(do_pivot, Binv2, Binv)
+    xB = jnp.where(do_pivot, xB3, xB)
+    d = jnp.where(do_pivot, d2, d)
+    y = jnp.where(do_pivot, y2, y)
+    since = jnp.where(do_pivot, since + 1,
+                      jnp.where((no_pivot | unsafe) & stale,
+                                jnp.int32(refactor_every), since))
+
+    # ---- anti-cycling: degenerate (theta ~ 0) pivot streaks ----
+    degen = do_pivot & (jnp.abs(theta) <= THETA_EPS)
+    progress = do_pivot & (jnp.abs(theta) > THETA_EPS)
+    n_bland = n_bland + (bland & do_pivot).astype(jnp.int32)
+    stall = jnp.where(progress, 0,
+                      jnp.where(degen, stall + 1, stall))
+    bland = jnp.where(progress, False,
+                      bland | (stall >= STALL_BLAND))
+    since = jnp.where(degen & (stall == STALL_REFACTOR),
+                      jnp.int32(refactor_every), since)
+    it2 = it + 1
+    if active is not None:
+        # frozen lane: every scalar field passes through (array fields
+        # are already unchanged because do_pivot is False)
+        st0 = state
+        new_status = jnp.where(active, new_status, st0[11])
+        it2 = jnp.where(active, it2, st0[12])
+        since = jnp.where(active, since, st0[13])
+        stall = jnp.where(active, stall, st0[7])
+        bland = jnp.where(active, bland, st0[8])
+        n_bland = jnp.where(active, n_bland, st0[9])
+    return (basis, in_basis, at_upper, Binv, xB, d, y,
+            stall.astype(jnp.int32), bland, n_bland, n_drift,
+            new_status, it2.astype(jnp.int32),
+            since.astype(jnp.int32))
+
+
+def _gather_solution(cf, l, u, basis, in_basis, at_upper, xB):
+    """Assemble the FULL (n+m,) primal vector and objective from basic
+    values ``xB`` (factors already fresh — see ``_extract_solution``)."""
+    xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
+    # scatter-free x[basis[i]] = xB[i]: gather the basis row position of
+    # each in-basis column (a vmapped scatter would run as a sequential
+    # K*m-trip loop on CPU)
+    iN = jnp.arange(xN.shape[0])
+    pos = jnp.argmax(basis[:, None] == iN[None, :], axis=0)
+    x = jnp.where(in_basis, xB[pos], xN)
+    obj = cf @ jnp.where(jnp.isfinite(x), x, 0.0)
+    return x, obj
+
+
+def _extract_solution(cf, A, l, u, basis, in_basis, at_upper):
+    """Final answer from a fresh factorization (mirrors the numpy twin's
+    exit path); returns the FULL (n+m,) primal vector."""
+    _, xB, _, y = _refreshed(cf, A, l, u, basis, in_basis, at_upper)
+    x, obj = _gather_solution(cf, l, u, basis, in_basis, at_upper, xB)
+    return x, obj, y
+
+
 @partial(jax.jit, static_argnames=("max_iters", "refactor_every"))
 def _solve_lp_jax(cf, A, l, u, basis0, at_upper0, max_iters: int,
                   refactor_every: int = REFACTOR_EVERY):
-    N = A.shape[1]
-    m = A.shape[0]
-    n = N - m
+    n = A.shape[1] - A.shape[0]
     tol = 1e-7
 
-    in_basis0 = jnp.zeros(N, bool).at[basis0].set(True)
-    at_upper0 = at_upper0 & ~in_basis0
-
-    def refreshed(basis, in_basis, at_upper):
-        Binv = jnp.linalg.inv(A[:, basis])
-        xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
-        xN = xN.at[basis].set(0.0)
-        xB = -Binv @ (A @ xN)
-        y = Binv.T @ cf[basis]
-        d = (cf - A.T @ y).at[basis].set(0.0)
-        return Binv, xB, d, y
-
     def cond(state):
-        status, it = state[-3], state[-2]
+        status, it = state[_STATE_STATUS], state[_STATE_IT]
         return (status == ITER_LIMIT) & (it < max_iters)
 
     def body(state):
-        (basis, in_basis, at_upper, Binv, xB, d, y, stall, bland, n_bland,
-         n_drift, status, it, since) = state
+        return _pivot_iter(cf, A, l, u, tol, refactor_every, state)
 
-        # NOTE: refresh branches take the factor state as an explicit
-        # operand (not via closure): lax.cond caches branch jaxprs by
-        # function identity, so a closure reused across two cond calls
-        # would replay the FIRST call's captured tracers.
-        def do_ref(ops):
-            return refreshed(basis, in_basis, at_upper) + (jnp.int32(0),)
-
-        # numerical-health check: residual drift of the rank-1-updated
-        # inverse forces an immediate refactorization (m is tiny, so the
-        # m×m residual costs nothing next to the O(mn) pricing pass)
-        resid = jnp.abs(Binv @ A[:, basis]
-                        - jnp.eye(m, dtype=A.dtype)).max()
-        drift = (resid > DRIFT_TOL) & (since > 0)
-        n_drift = n_drift + drift.astype(jnp.int32)
-        # repro: allow[REPRO001] do_ref captures the SAME loop-carried
-        # tracers at both cond sites within one trace of this body, so the
-        # identity-cached branch jaxpr is correct by construction
-        Binv, xB, d, y, since = jax.lax.cond(
-            drift | (since >= refactor_every), do_ref, lambda ops: ops,
-            (Binv, xB, d, y, since))
-        lB, uB = l[basis], u[basis]
-        viol = jnp.maximum(lB - xB, xB - uB)
-        # optimality suspected on stale factors -> refactorize, re-check
-        # repro: allow[REPRO001] same captured tracers as the cond above
-        Binv, xB, d, y, since = jax.lax.cond(
-            (viol[jnp.argmax(viol)] <= tol) & (since > 0), do_ref,
-            lambda ops: ops, (Binv, xB, d, y, since))
-        viol_lo = lB - xB
-        viol_hi = xB - uB
-        viol = jnp.maximum(viol_lo, viol_hi)
-        r_max = jnp.argmax(viol)
-        done = viol[r_max] <= tol
-        # Bland mode: violated row with the smallest BASIC VARIABLE index
-        # (row position alone does not carry the finiteness guarantee)
-        r_bland = jnp.argmin(jnp.where(viol > tol, basis, N))
-        r = jnp.where(bland, r_bland, r_max)
-
-        above = viol_hi[r] >= viol_lo[r]
-        delta = jnp.where(above, xB[r] - uB[r], xB[r] - lB[r])
-        s = jnp.where(delta > 0, 1.0, -1.0)
-        rho = Binv[r]
-        alpha = rho @ A                 # pricing: the single O(mn) sweep
-
-        sa = s * alpha
-        elig = (~in_basis) & (
-            ((~at_upper) & (sa > tol)) | (at_upper & (sa < -tol)))
-        any_elig = jnp.any(elig)
-        ratio = jnp.where(elig,
-                          jnp.maximum(d / jnp.where(jnp.abs(sa) > tol, sa, 1.0),
-                                      0.0), jnp.inf)
-        width = u - l
-        flip_cost = jnp.where(elig, jnp.abs(alpha) * width, 0.0)
-
-        order = jnp.argsort(ratio)
-        csum_all = jnp.cumsum(flip_cost[order])
-        flip_budget = jnp.abs(delta)
-        elig_sorted = elig[order]
-        crossed = (csum_all >= flip_budget - 1e-12) & elig_sorted
-        cross_pos = jnp.argmax(crossed)          # first True (0 if none)
-        # Bland mode: smallest-index min-ratio column, no bound flips
-        rmin = jnp.min(ratio)
-        q_bland = jnp.argmax(elig & (ratio <= rmin + 1e-12))
-        has_cross = jnp.any(crossed) | (bland & any_elig)
-        q = jnp.where(bland, q_bland, order[cross_pos])
-        # only flip breakpoints strictly before the crossing in sorted order
-        rank = jnp.empty(N, jnp.int32).at[order].set(
-            jnp.arange(N, dtype=jnp.int32))
-        flip_mask = elig & (rank < rank[q]) & ~bland
-
-        stale = since > 0
-        w = Binv @ A[:, q]
-        # numerically unsafe pivot (possible only on drifted factors;
-        # fresh factors guarantee |w[r]| = |alpha_q| > tol) -> no pivot,
-        # force a refactorize-and-retry like the numpy twin
-        unsafe = jnp.abs(w[r]) < 1e-11
-        no_pivot = ~any_elig | ~has_cross
-        # infeasibility on stale factors: force a refactorize-and-retry
-        # instead of declaring; on fresh factors it is genuine
-        new_status = jnp.where(done, OPTIMAL,
-                               jnp.where(no_pivot & ~stale, INFEASIBLE,
-                                         ITER_LIMIT)).astype(jnp.int32)
-        do_pivot = (new_status == ITER_LIMIT) & ~no_pivot & ~unsafe
-
-        # ---- incremental pivot ----
-        leave = basis[r]
-        dxN = jnp.where(flip_mask,
-                        jnp.where(at_upper, l - u, u - l), 0.0)
-        xB2 = xB - Binv @ (A @ dxN)     # flip absorption (masked matvec)
-        at_upper_f = at_upper ^ flip_mask
-        wr = jnp.where(unsafe, 1.0, w[r])
-        target = jnp.where(above, uB[r], lB[r])
-        t = (xB2[r] - target) / wr
-        xq = jnp.where(at_upper_f[q], u[q], l[q])
-        xB3 = (xB2 - t * w).at[r].set(xq + t)
-        theta = d[q] / wr
-        d2 = (d - theta * alpha).at[q].set(0.0).at[leave].set(-theta)
-        y2 = y + theta * rho
-        Binv_r = Binv[r] / wr
-        Binv2 = (Binv - jnp.outer(w, Binv_r)).at[r].set(Binv_r)
-        at_upper2 = at_upper_f.at[leave].set(above).at[q].set(False)
-        in_basis2 = in_basis.at[leave].set(False).at[q].set(True)
-        basis2 = basis.at[r].set(q)
-
-        basis = jnp.where(do_pivot, basis2, basis)
-        in_basis = jnp.where(do_pivot, in_basis2, in_basis)
-        at_upper = jnp.where(do_pivot, at_upper2, at_upper)
-        Binv = jnp.where(do_pivot, Binv2, Binv)
-        xB = jnp.where(do_pivot, xB3, xB)
-        d = jnp.where(do_pivot, d2, d)
-        y = jnp.where(do_pivot, y2, y)
-        since = jnp.where(do_pivot, since + 1,
-                          jnp.where((no_pivot | unsafe) & stale,
-                                    jnp.int32(refactor_every), since))
-
-        # ---- anti-cycling: degenerate (theta ~ 0) pivot streaks ----
-        degen = do_pivot & (jnp.abs(theta) <= THETA_EPS)
-        progress = do_pivot & (jnp.abs(theta) > THETA_EPS)
-        n_bland = n_bland + (bland & do_pivot).astype(jnp.int32)
-        stall = jnp.where(progress, 0,
-                          jnp.where(degen, stall + 1, stall))
-        bland = jnp.where(progress, False,
-                          bland | (stall >= STALL_BLAND))
-        since = jnp.where(degen & (stall == STALL_REFACTOR),
-                          jnp.int32(refactor_every), since)
-        return (basis, in_basis, at_upper, Binv, xB, d, y,
-                stall.astype(jnp.int32), bland, n_bland, n_drift,
-                new_status, (it + 1).astype(jnp.int32),
-                since.astype(jnp.int32))
-
-    state = (basis0, in_basis0, at_upper0, jnp.eye(m, dtype=A.dtype),
-             jnp.zeros(m, A.dtype), cf, jnp.zeros(m, A.dtype),
-             jnp.int32(0), jnp.bool_(False), jnp.int32(0), jnp.int32(0),
-             jnp.int32(ITER_LIMIT), jnp.int32(0),
-             jnp.int32(refactor_every))  # since=K: factorize on entry
+    # since=refactor_every in the initial state: factorize on entry
+    state = _init_pivot_state(cf, A, basis0, at_upper0, refactor_every)
     state = jax.lax.while_loop(cond, body, state)
     (basis, in_basis, at_upper, _, _, _, _, _, _, n_bland, n_drift,
      status, it, _) = state
-    Binv, xB, d, y = refreshed(basis, in_basis, at_upper)
-    xN = jnp.where(in_basis, 0.0, jnp.where(at_upper, u, l))
-    xN = xN.at[basis].set(0.0)
-    x = xN.at[basis].set(xB)
-    obj = cf @ jnp.where(jnp.isfinite(x), x, 0.0)
+    x, obj, y = _extract_solution(cf, A, l, u, basis, in_basis, at_upper)
     return status, x[:n], obj, it, basis, at_upper, y, n_bland, n_drift
 
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -28,11 +28,29 @@ from repro.core.dual_reducer import PackageResult, dual_reducer
 from repro.core.hierarchy import Hierarchy
 from repro.core.lp import (INFEASIBLE, OPTIMAL, LPResult, WarmStart,
                            fill_warm_basis, solve_lp_np)
+from repro.core.lp_batch import solve_lp_batch
 from repro.core.neighbor import neighbor_sampling
 from repro.core.paql import PackageQuery
 from repro.core.relation import gather_column
 
 FALLBACK_SEED = 64   # LP-infeasible layer: seed with top-k by objective
+
+
+def _expand_warm(res: LPResult, pos: np.ndarray, n_old: int,
+                 n_new: int) -> WarmStart:
+    """Re-index an LP state over n_old columns onto a superset LP with
+    n_new columns; ``pos[j]`` is old column j's position in the new set
+    (slacks shift by the new n).  Used by the batched ladder to carry
+    the failed layer LP's basis into the union candidate set."""
+    m = len(res.y)
+    basis = np.asarray(res.basis, np.int64)
+    struct = basis < n_old
+    safe = np.minimum(basis, n_old - 1)
+    new_basis = np.where(struct, pos[safe], n_new + (basis - n_old))
+    at_upper = np.zeros(n_new + m, bool)
+    at_upper[pos] = res.at_upper[:n_old]
+    at_upper[n_new:] = res.at_upper[n_old:]
+    return WarmStart(new_basis.astype(np.int64), at_upper)
 
 
 def map_warm_basis(hier: Hierarchy, l: int, S_l: np.ndarray,
@@ -154,23 +172,74 @@ def shading(hier: Hierarchy, l: int, alpha: int, S_l: np.ndarray,
         if report is not None:
             report.absorb_lp(res)
         if res.status != OPTIMAL and ladder:
-            if res.status == INFEASIBLE:
-                # ladder rung 1: warm retry at relaxed tolerance (numpy
-                # twin — the only one with a tol knob)
-                retry = _lp(S_used, res, solver=solve_lp_np, tol=1e-5)
+            retry_wanted = res.status == INFEASIBLE
+            # evaluate the widened set up front (neighbor_sampling is
+            # deterministic) so both ladder rungs can ride one batched
+            # dispatch when they are both in play
+            S_wide = None
+            if widen is not None and not (budget is not None
+                                          and budget.exhausted()):
+                S_w = np.asarray(widen(2))
+                if len(S_w) > len(S_used):
+                    S_wide = S_w
+            if retry_wanted and S_wide is not None \
+                    and lp_solver is solve_lp_np:
+                # both rungs needed: solve them as ONE batched flight of
+                # bound-variants over the union candidate set U — the
+                # relax-tol retry lane masks non-S_used columns out via
+                # ub = 0 (warm from the failed LP's basis, tol 1e-5),
+                # the α-escalation lane runs the full U cold.  A
+                # degraded rung costs one dispatch, not three solves.
+                U = np.union1d(np.asarray(S_used, np.int64),
+                               np.asarray(S_wide, np.int64))
+                cU, AU, blU, buU, ubU = query.matrices(layer_table, U)
+                pos = np.searchsorted(U, np.asarray(S_used, np.int64))
+                ub_mask = np.zeros(len(U))
+                ub_mask[pos] = ubU[pos]
+                lanes = solve_lp_batch(
+                    cU, AU, blU, buU, [ub_mask, ubU],
+                    tol=[1e-5, 1e-7],
+                    warm_starts=[_expand_warm(res, pos, len(S_used),
+                                              len(U)), None],
+                    max_iters=max_lp_iters, budget=budget,
+                    monitor=monitor)
+                retry, wide_res = lanes
                 if report is not None:
+                    report.lp_batches += 1
                     report.rung("layer_relax_tol",
                                 detail=f"layer {l}: retry "
                                        f"status={retry.status}")
                     report.absorb_lp(retry)
                 if retry.status == OPTIMAL:
                     res = retry
-            if res.status != OPTIMAL and widen is not None and not (
-                    budget is not None and budget.exhausted()):
-                # ladder rung 2: α escalation — re-solve over a doubled
-                # candidate set (cold: the basis indices don't transfer)
-                S_wide = np.asarray(widen(2))
-                if len(S_wide) > len(S_used):
+                    S_used = U
+                else:
+                    if report is not None:
+                        report.rung("alpha_escalation",
+                                    detail=f"layer {l}: |S| "
+                                           f"{len(S_used)} -> "
+                                           f"{len(U)}")
+                        report.absorb_lp(wide_res)
+                    if wide_res.status == OPTIMAL:
+                        res = wide_res
+                        S_used = U
+            else:
+                if retry_wanted:
+                    # ladder rung 1: warm retry at relaxed tolerance
+                    # (numpy twin — the only one with a tol knob)
+                    retry = _lp(S_used, res, solver=solve_lp_np, tol=1e-5)
+                    if report is not None:
+                        report.rung("layer_relax_tol",
+                                    detail=f"layer {l}: retry "
+                                           f"status={retry.status}")
+                        report.absorb_lp(retry)
+                    if retry.status == OPTIMAL:
+                        res = retry
+                if res.status != OPTIMAL and S_wide is not None and not (
+                        budget is not None and budget.exhausted()):
+                    # ladder rung 2: α escalation — re-solve over a
+                    # doubled candidate set (cold: the basis indices
+                    # don't transfer)
                     wide_res = _lp(S_wide, None)
                     if report is not None:
                         report.rung("alpha_escalation",

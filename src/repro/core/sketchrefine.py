@@ -10,8 +10,7 @@ false-infeasibility/quality limits §4.2 demonstrates.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 

@@ -8,11 +8,10 @@ batch k+1 regardless of the new mesh width).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
-from repro.configs.base import ArchConfig
 
 
 @dataclasses.dataclass(frozen=True)

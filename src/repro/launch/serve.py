@@ -14,7 +14,6 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import Model
 from repro.serving import PackageScheduler, Request, ServingEngine
-from repro.training.step import init_train_state
 
 
 def main(argv=None):

@@ -7,11 +7,11 @@ for every model input — no device allocation — exactly what
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import ArchConfig, ShapeConfig, get_config, SHAPES
 from repro.distributed.context import use_rules

@@ -13,7 +13,7 @@ of re-expanding the latent cache to per-head K/V.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

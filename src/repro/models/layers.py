@@ -6,7 +6,7 @@ the input; normalisation and softmax accumulate in f32.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -30,7 +30,7 @@ from repro.models import transformer as tfm
 from repro.models.layers import (apply_norm, embed_tokens, embedding_spec,
                                  logits_from, norm_spec, sinusoidal_positions)
 from repro.models.param import (ParamInfo, abstract_params, axes_tree,
-                                init_params, param_count, stacked)
+                                init_params, param_count)
 
 
 def _dtype(cfg: ArchConfig):

@@ -16,7 +16,7 @@ used by tests with a capacity factor high enough to guarantee no drops.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ Activation checkpointing (remat) wraps the scanned body per ``cfg.remat``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (apply_mlp, apply_norm, mlp_spec, norm_spec)
-from repro.models.param import ParamInfo, stacked
+from repro.models.param import stacked
 
 
 def _remat(fn, mode: str):

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import statistics
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 class WorkerState(enum.Enum):

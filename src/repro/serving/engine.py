@@ -9,7 +9,7 @@ configs end-to-end (examples/serve_lm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import Model
-from repro.serving.scheduler import PackageScheduler, Request
+from repro.serving.scheduler import PackageScheduler
 
 
 @dataclasses.dataclass

@@ -14,16 +14,24 @@ and batch formation IS a package query:
 solved with Dual Reducer (sub-second at 10^5+ queued requests, matching the
 paper's interactivity requirement).  This replaces greedy FCFS admission
 with a globally optimal knapsack per tick.
+
+The per-request feature table is maintained incrementally: columns are
+appended once at ``submit`` (kv_bytes / prefill_flops are computed exactly
+once per request) and mask-compacted when requests are admitted, so a tick
+over a large pool never rebuilds python-side lists.  Each tick solves
+under a ``guard.SolveBudget`` deadline and contains any solver exception,
+so the serving loop inherits the never-raise / never-hang contract; the
+last ``guard.SolveReport`` is kept on ``last_report`` for observability.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.dual_reducer import dual_reducer
+from repro.core.guard import ERROR, NumericalMonitor, SolveBudget, SolveReport
 from repro.core.paql import Constraint, PackageQuery
 
 
@@ -44,33 +52,78 @@ class Request:
         return float(2 * n_active * self.prompt_tokens)
 
 
+_COLUMNS = ("priority", "kv_bytes", "prefill_flops")
+
+
+class _ColumnStore:
+    """Growable column arrays for the waiting pool.
+
+    Rows are appended on ``submit`` (amortized O(1): capacity doubles)
+    and removed by boolean-mask compaction on admission, so the solver
+    sees zero-copy array views instead of per-tick list comprehensions.
+    """
+
+    def __init__(self, capacity: int = 64):
+        self._cap = max(int(capacity), 1)
+        self._len = 0
+        self._cols = {k: np.zeros(self._cap) for k in _COLUMNS}
+
+    def __len__(self) -> int:
+        return self._len
+
+    def append(self, priority: float, kv: float, flops: float) -> None:
+        if self._len == self._cap:
+            self._cap *= 2
+            for k, old in self._cols.items():
+                buf = np.zeros(self._cap)
+                buf[:self._len] = old[:self._len]
+                self._cols[k] = buf
+        row = {"priority": priority, "kv_bytes": kv, "prefill_flops": flops}
+        for k in _COLUMNS:
+            self._cols[k][self._len] = row[k]
+        self._len += 1
+
+    def view(self) -> Dict[str, np.ndarray]:
+        return {k: v[:self._len] for k, v in self._cols.items()}
+
+    def compact(self, keep: np.ndarray) -> None:
+        """Drop rows where ``keep`` is False (in place, order-preserving)."""
+        kept = int(np.count_nonzero(keep))
+        for v in self._cols.values():
+            v[:kept] = v[:self._len][keep]
+        self._len = kept
+
+
 class PackageScheduler:
     def __init__(self, cfg, *, hbm_budget_bytes: float,
-                 flop_budget: float, max_batch: int = 64, seed: int = 0):
+                 flop_budget: float, max_batch: int = 64, seed: int = 0,
+                 time_limit_s: float = 5.0, wave_width: int = 8):
         self.cfg = cfg
         self.hbm_budget = hbm_budget_bytes
         self.flop_budget = flop_budget
         self.max_batch = max_batch
+        self.time_limit_s = time_limit_s
+        self.wave_width = wave_width
         self.queue: List[Request] = []
         self.rng = np.random.default_rng(seed)
+        self._store = _ColumnStore()
         self._admitted_total = 0
+        self.last_report: Optional[SolveReport] = None
 
     def submit(self, req: Request):
         self.queue.append(req)
-
-    def _table(self) -> Dict[str, np.ndarray]:
-        return {
-            "priority": np.array([r.priority for r in self.queue]),
-            "kv_bytes": np.array([r.kv_bytes(self.cfg) for r in self.queue]),
-            "prefill_flops": np.array(
-                [r.prefill_flops(self.cfg) for r in self.queue]),
-        }
+        self._store.append(req.priority, req.kv_bytes(self.cfg),
+                           req.prefill_flops(self.cfg))
 
     def tick(self) -> List[Request]:
-        """Admit the optimal batch; admitted requests leave the queue."""
+        """Admit the optimal batch; admitted requests leave the queue.
+
+        Never raises and never hangs: the solve runs under a
+        ``SolveBudget`` wall-clock deadline and any unexpected exception
+        is contained into an ERROR report (empty admission).
+        """
         if not self.queue:
             return []
-        table = self._table()
         query = PackageQuery(
             "priority", maximize=True,
             constraints=(
@@ -78,14 +131,33 @@ class PackageScheduler:
                 Constraint("kv_bytes", hi=self.hbm_budget),
                 Constraint("prefill_flops", hi=self.flop_budget),
             ))
-        res = dual_reducer(query, table, np.arange(len(self.queue)),
-                           q=min(500, len(self.queue)), rng=self.rng,
-                           ilp_kwargs=dict(max_nodes=200, time_limit_s=5))
+        budget = SolveBudget(deadline_s=self.time_limit_s).start()
+        report = SolveReport(budget=budget, monitor=NumericalMonitor())
+        try:
+            res = dual_reducer(query, self._store.view(),
+                               np.arange(len(self.queue)),
+                               q=min(500, len(self.queue)), rng=self.rng,
+                               budget=budget, report=report,
+                               ilp_kwargs=dict(
+                                   max_nodes=200,
+                                   wave_width=self.wave_width))
+        # repro: allow[REPRO004] containment rung by design: the tick
+        # contract is "never raises" — failures become an ERROR report
+        except Exception as exc:   # pragma: no cover - containment rung
+            report.status = ERROR
+            report.note(f"scheduler tick contained: {type(exc).__name__}: "
+                        f"{exc}")
+            self.last_report = report
+            return []
+        self.last_report = report.finalize(res.feasible)
         if not res.feasible:
             return []   # nothing admissible this tick
         take = set(int(i) for i in res.idx)
+        keep = np.ones(len(self.queue), bool)
+        keep[list(take)] = False
         admitted = [r for i, r in enumerate(self.queue) if i in take]
         self.queue = [r for i, r in enumerate(self.queue) if i not in take]
+        self._store.compact(keep)
         self._admitted_total += len(admitted)
         return admitted
 

@@ -14,7 +14,7 @@ and added back the next step, which keeps SGD/Adam convergence unbiased
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

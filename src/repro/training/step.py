@@ -6,13 +6,11 @@ State is a plain dict pytree:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.models import Model
 from repro.training.optimizer import OptHyper, adamw_init, adamw_update
 

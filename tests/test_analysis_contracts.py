@@ -8,10 +8,11 @@ import pytest
 
 import repro.core  # noqa: F401  (x64 on, before any tracing)
 from repro.analysis import contracts
-from repro.analysis.contracts import (callback_prims, check_lp_twin,
-                                      check_pq_step, check_refresh_step,
-                                      check_update_step, collective_prims,
-                                      dense_dot_counts, f64_introductions,
+from repro.analysis.contracts import (callback_prims, check_lp_batch,
+                                      check_lp_twin, check_pq_step,
+                                      check_refresh_step, check_update_step,
+                                      collective_prims, dense_dot_counts,
+                                      f64_introductions,
                                       pq_collective_budget, run_contracts)
 
 
@@ -96,7 +97,17 @@ def test_refresh_step_is_the_recompute_site():
 def test_lp_twin_clean_and_trip_bounded():
     r = check_lp_twin(m=4, N=64, max_iters=32)
     assert r.ok, [v.format() for v in r.violations]
-    assert r.record["max_trip"] == 64   # BFRT inner loops bound at N
+    # the pivot body is scatter-free (one-hot selects, stable-sort rank
+    # compare), so the only inner while loops left are the LU sweeps of
+    # the refresh factorization — bound by m, never by N or max_iters
+    assert r.record["max_trip"] == 4
+
+
+def test_lp_batch_core_clean():
+    r = check_lp_batch(m=4, n=16, K=4, max_iters=16)
+    assert r.ok, [v.format() for v in r.violations]
+    # single-device batch: the record must carry the while trip bounds
+    assert r.record["max_trip"] > 0
 
 
 def test_budget_formula_scales_with_p():
@@ -116,7 +127,7 @@ def test_run_contracts_host_grid_green():
     assert violations == [], "\n".join(v.format() for v in violations)
     names = {r["hot_path"].split("@")[0] for r in records}
     assert {"distributed.pq_step", "distributed.update_step",
-            "distributed.refresh_step", "lp.twin_step",
+            "distributed.refresh_step", "lp.twin_step", "lp_batch.core",
             "kernels.pricing", "kernels.segstats",
             "partitioner.descend_batch"} <= names
     assert wall_s > 0

@@ -1,6 +1,5 @@
 """Dual Reducer: support-size theory, auxiliary-LP spreading, fallback."""
 import numpy as np
-import pytest
 
 from repro.core.dual_reducer import dual_reducer
 from repro.core.lp import solve_lp_np

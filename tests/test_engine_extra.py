@@ -10,7 +10,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.hardness import (Q1_SDSS, TEMPLATES, instantiate, ndtri)
+from repro.core.hardness import (Q1_SDSS, instantiate, ndtri)
 from repro.core.paql import Constraint, PackageQuery
 
 

@@ -2,7 +2,6 @@
 trip-count recovery, the per-collective byte model (both replica_groups
 forms, async start/done pairs, while weighting), the host-transfer /
 python-callback walker, and the per-while-body per-trip stats."""
-import numpy as np
 import pytest
 
 from repro.distributed.hlo_analysis import (collective_bytes, hlo_stats,
@@ -197,7 +196,7 @@ def test_real_lowering_roundtrip():
     count matches the scan length, with all-reduce traffic to match."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     if len(jax.devices()) < 2:
         pytest.skip("needs >= 2 devices")
     mesh = jax.make_mesh((2,), ("data",))

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.bfrt import bfrt_select
 from repro.kernels.ops import (bfrt_select_op, flash_attention_op,
                                pricing_op, segment_stats_op)
 from repro.kernels.ref import bfrt_sequential_ref

@@ -132,6 +132,25 @@ def test_degenerate_lp_terminates_under_stall_monitor():
     assert any(note.startswith("stall:") for note in r1.notes)
 
 
+@pytest.mark.parametrize("seed", [0, 17, 123, 4096, 9999])
+def test_lp_batch_agrees_with_sequential(seed):
+    """Property check of the batched engine against the numpy twin: a
+    random flight of bound-variants of one random LP must agree lane by
+    lane on status and objective (the batched pivot loop is the single
+    twin's pivot step vmapped — padding and masking are inert)."""
+    from repro.core.lp_batch import solve_lp_batch
+    rng = np.random.default_rng(seed)
+    c, A, bl, bu, ub = _random_lp(seed)
+    K = int(rng.integers(2, 5))
+    ubs = [ub * rng.uniform(0.3, 1.0, len(ub)) for _ in range(K)]
+    ress = solve_lp_batch(c, A, bl, bu, ubs, backend="jax")
+    for k in range(K):
+        ref = solve_lp_np(c, A, bl, bu, ubs[k])
+        assert ress[k].status == ref.status
+        if ref.status == OPTIMAL:
+            assert abs(ress[k].obj - ref.obj) <= 1e-7 * (1 + abs(ref.obj))
+
+
 def test_lp_bfrt_long_step_count():
     """Package-structured LP solves in few iterations (BFRT long steps)."""
     rng = np.random.default_rng(1)

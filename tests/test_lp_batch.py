@@ -1,0 +1,236 @@
+"""Batched bound-variant LP engine (core.lp_batch): parity with the
+sequential twin (cold and warm, down to the basis), exact freezing of
+masked-done lanes, W-wave B&B equivalence, budget salvage mid-batch and
+bounded compile-class counts."""
+import numpy as np
+import pytest
+
+from repro.core.guard import NumericalMonitor, SolveBudget
+from repro.core.ilp import ILP_LIMIT, ILP_OPTIMAL, solve_ilp
+from repro.core.lp import BUDGET, OPTIMAL, solve_lp_np, verify_optimality
+from repro.core.lp_batch import (batch_cache_stats, batch_stats,
+                                 solve_lp_batch)
+
+
+def _flight(seed, K=5, n=24, m=3):
+    """One shared (c, A, bl, bu) plus K feasible bound-variants."""
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n)
+    A = rng.normal(size=(m, n))
+    ub = rng.integers(1, 4, size=n).astype(float)
+    x0 = rng.uniform(0, 1, n) * ub
+    act = A @ x0
+    width = np.abs(rng.normal(size=m)) * 2 + 0.5
+    bl = act - width
+    bu = act + width
+    ubs = [ub * rng.uniform(0.5, 1.0, n) for _ in range(K)]
+    lbs = [np.zeros(n) for _ in range(K)]
+    return c, A, bl, bu, ubs, lbs
+
+
+def _assert_lane_parity(res, ref, lane=""):
+    assert res.status == ref.status, lane
+    if ref.status == OPTIMAL:
+        assert res.obj == pytest.approx(ref.obj, abs=1e-9), lane
+        assert res.iters == ref.iters, lane
+        assert np.array_equal(np.sort(res.basis), np.sort(ref.basis)), lane
+        assert np.array_equal(res.at_upper, ref.at_upper), lane
+        np.testing.assert_allclose(res.x, ref.x, atol=1e-9)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_batched_matches_sequential_cold(seed):
+    """jax-batched flight == per-lane solve_lp_np, pivot for pivot: same
+    status, objective, iteration count, basis and bound pattern."""
+    c, A, bl, bu, ubs, lbs = _flight(seed)
+    ress = solve_lp_batch(c, A, bl, bu, ubs, lbs, backend="jax")
+    for k, (u, l) in enumerate(zip(ubs, lbs)):
+        ref = solve_lp_np(c, A, bl, bu, u, lb=l)
+        _assert_lane_parity(ress[k], ref, lane=f"lane {k}")
+        if ref.status == OPTIMAL:
+            ok, msg = verify_optimality(ress[k], c, A, bl, bu, u, lb=l)
+            assert ok, msg
+
+
+def test_batched_matches_sequential_warm(seed=7):
+    """Per-lane warm bases reproduce the sequential warm solves (the
+    padded-space basis remap preserves the pivot sequence)."""
+    c, A, bl, bu, ubs, _ = _flight(seed, K=4)
+    base = solve_lp_np(c, A, bl, bu, np.max(ubs, axis=0))
+    assert base.status == OPTIMAL
+    warms = [base] * len(ubs)
+    ress = solve_lp_batch(c, A, bl, bu, ubs, warm_starts=warms,
+                          backend="jax")
+    for k, u in enumerate(ubs):
+        ref = solve_lp_np(c, A, bl, bu, u, warm_start=base)
+        _assert_lane_parity(ress[k], ref, lane=f"lane {k}")
+
+
+def test_backend_np_is_bit_compatible():
+    """The sequential fallback routes through solve_lp_np verbatim."""
+    c, A, bl, bu, ubs, lbs = _flight(2, K=3)
+    ress = solve_lp_batch(c, A, bl, bu, ubs, lbs, backend="np")
+    for k, (u, l) in enumerate(zip(ubs, lbs)):
+        ref = solve_lp_np(c, A, bl, bu, u, lb=l)
+        assert ress[k].status == ref.status
+        assert ress[k].obj == ref.obj
+        assert ress[k].iters == ref.iters
+        assert np.array_equal(ress[k].x, ref.x)
+        assert ress[k].notes == ref.notes
+
+
+def test_masked_done_lane_frozen_exactly():
+    """A lane that converges early is frozen by the per-lane select: its
+    answer is bit-identical whether its neighbors pivot on for 1 or 100
+    more iterations (here: solved alone vs. in a mixed flight)."""
+    rng = np.random.default_rng(4)
+    n, m = 30, 3
+    c = rng.normal(size=n)
+    A = rng.normal(size=(m, n))
+    ub = np.ones(n)
+    act = A @ (0.5 * ub)
+    bl, bu = act - 1.0, act + 1.0
+    # lane 0: trivially-done variant (all bounds pinned to 0 feasible only
+    # if box allows; use a tiny box so it converges in very few pivots)
+    ub_fast = np.full(n, 1e-3)
+    blf = np.minimum(bl, A @ np.zeros(n))
+    alone = solve_lp_batch(c, A, blf, bu, [ub_fast], backend="np")[0]
+    mixed = solve_lp_batch(c, A, blf, bu, [ub_fast, ub, ub * 0.7,
+                                           ub * 0.4], backend="jax")
+    assert mixed[0].status == alone.status
+    if alone.status == OPTIMAL:
+        assert mixed[0].obj == pytest.approx(alone.obj, abs=1e-12)
+        assert mixed[0].iters == alone.iters
+        assert np.array_equal(np.sort(mixed[0].basis),
+                              np.sort(alone.basis))
+    # and the slow lanes still match their sequential references
+    for k, u in [(1, ub), (2, ub * 0.7), (3, ub * 0.4)]:
+        ref = solve_lp_np(c, A, blf, bu, u)
+        _assert_lane_parity(mixed[k], ref, lane=f"lane {k}")
+
+
+def test_wave_bb_matches_node_loop():
+    """W=1 (sequential fallback) is the legacy node loop; W>1 waves must
+    find the same optimum on a tight-window instance, and the wave
+    engine's incumbents stay integral/feasible."""
+    rng = np.random.default_rng(9)
+    n = 60
+    vals = rng.normal(10, 2, n)
+    c = rng.normal(size=n)
+    A = np.stack([np.ones(n), vals])
+    bl = np.array([5.0, 57.0])
+    bu = np.array([9.0, 63.0])
+    r1 = solve_ilp(c, A, bl, bu, np.ones(n), wave_width=1)
+    r4 = solve_ilp(c, A, bl, bu, np.ones(n), wave_width=4)
+    r16 = solve_ilp(c, A, bl, bu, np.ones(n), wave_width=16,
+                    batch_backend="jax")
+    assert r1.feasible and r1.status == ILP_OPTIMAL
+    for r in (r4, r16):
+        assert r.feasible and r.status == ILP_OPTIMAL
+        assert r.obj == pytest.approx(r1.obj, abs=1e-9)
+        assert np.array_equal(r.x, r1.x)
+        act = A @ r.x
+        assert np.all(act >= bl - 1e-6) and np.all(act <= bu + 1e-6)
+    # W=1 is deterministic: running it twice is bit-identical
+    r1b = solve_ilp(c, A, bl, bu, np.ones(n), wave_width=1)
+    assert r1b.nodes == r1.nodes and r1b.lp_iters == r1.lp_iters
+    assert np.array_equal(r1b.x, r1.x)
+
+
+def test_budget_exhaustion_mid_batch_salvages_incumbent():
+    """Pivot budget dies mid-search: the wave B&B returns the best
+    incumbent found so far (ILP_LIMIT + feasible), and a batched flight
+    under an exhausted budget reports BUDGET instead of hanging."""
+    rng = np.random.default_rng(9)
+    n = 60
+    vals = rng.normal(10, 2, n)
+    c = rng.normal(size=n)
+    A = np.stack([np.ones(n), vals])
+    bl = np.array([5.0, 57.0])
+    bu = np.array([9.0, 63.0])
+    full = solve_ilp(c, A, bl, bu, np.ones(n), wave_width=8,
+                     batch_backend="jax")
+    assert full.status == ILP_OPTIMAL
+    budget = SolveBudget(max_pivots=200).start()
+    r = solve_ilp(c, A, bl, bu, np.ones(n), wave_width=8,
+                  batch_backend="jax", budget=budget)
+    assert r.status in (ILP_LIMIT, ILP_OPTIMAL)
+    if r.feasible:   # salvaged incumbent must be genuinely feasible
+        act = A @ r.x
+        assert np.all(act >= bl - 1e-6) and np.all(act <= bu + 1e-6)
+        assert np.all(np.abs(r.x - np.round(r.x)) < 1e-9)
+    assert budget.pivots_spent > 0
+    # flight under an already-dead budget: immediate BUDGET lanes
+    dead = SolveBudget(max_pivots=1)
+    dead.charge_pivots(5)
+    ress = solve_lp_batch(c, A, bl, bu, [np.ones(n)] * 3, budget=dead,
+                          backend="jax")
+    assert all(res.status == BUDGET for res in ress)
+
+
+def test_budget_charged_as_sum_of_lane_pivots():
+    c, A, bl, bu, ubs, lbs = _flight(5, K=4)
+    budget = SolveBudget(max_pivots=100_000).start()
+    mon = NumericalMonitor()
+    ress = solve_lp_batch(c, A, bl, bu, ubs, lbs, budget=budget,
+                          monitor=mon, backend="jax")
+    assert budget.pivots_spent >= sum(r.iters for r in ress)
+
+
+def test_compile_classes_bounded_across_K():
+    """Varying K inside one pow2 class reuses the executable: growing a
+    flight from 5 to 8 lanes must not recompile (no per-K recompile)."""
+    c, A, bl, bu, ubs, lbs = _flight(1, K=8)
+    before = batch_cache_stats()
+    solve_lp_batch(c, A, bl, bu, ubs[:5], lbs[:5], backend="jax")
+    mid = batch_cache_stats()
+    solve_lp_batch(c, A, bl, bu, ubs[:6], lbs[:6], backend="jax")
+    solve_lp_batch(c, A, bl, bu, ubs[:7], lbs[:7], backend="jax")
+    solve_lp_batch(c, A, bl, bu, ubs[:8], lbs[:8], backend="jax")
+    after = batch_cache_stats()
+    assert mid["misses"] >= before["misses"]      # first solve may compile
+    assert after["misses"] == mid["misses"]       # K=6,7,8 share K_pad=8
+    assert after["hits"] >= mid["hits"] + 3
+    assert after["size"] <= after["maxsize"]
+    assert batch_stats()["dispatches"] >= 4
+
+
+def test_empty_and_single_flights():
+    c, A, bl, bu, ubs, lbs = _flight(6, K=1)
+    assert solve_lp_batch(c, A, bl, bu, []) == []
+    # K=1 on auto routes through the numpy twin (bit-compatible)
+    res = solve_lp_batch(c, A, bl, bu, ubs, lbs)[0]
+    ref = solve_lp_np(c, A, bl, bu, ubs[0], lb=lbs[0])
+    assert res.status == ref.status and res.obj == ref.obj
+    assert res.iters == ref.iters
+
+
+def test_box_infeasible_lane_decided_on_host():
+    c, A, bl, bu, ubs, lbs = _flight(8, K=3)
+    lbs = [l.copy() for l in lbs]
+    lbs[1][:] = 2.0          # lb > ub: box-infeasible lane
+    ress = solve_lp_batch(c, A, bl, bu, ubs, lbs, backend="jax")
+    from repro.core.lp import INFEASIBLE
+    assert ress[1].status == INFEASIBLE
+    for k in (0, 2):
+        ref = solve_lp_np(c, A, bl, bu, ubs[k], lb=lbs[k])
+        _assert_lane_parity(ress[k], ref, lane=f"lane {k}")
+
+
+def test_warm_rejection_per_lane():
+    """An out-of-range warm basis falls cold for ITS lane only, with the
+    PR-1 rejection note; the other lanes keep their warm starts."""
+    c, A, bl, bu, ubs, _ = _flight(10, K=3)
+    base = solve_lp_np(c, A, bl, bu, np.max(ubs, axis=0))
+    assert base.status == OPTIMAL
+    from repro.core.lp import WarmStart
+    bad = WarmStart(np.full(A.shape[0], 10_000, np.int64), None)
+    ress = solve_lp_batch(c, A, bl, bu, ubs,
+                          warm_starts=[base, bad, base], backend="jax")
+    assert any(n.startswith("warm_start_rejected")
+               for n in ress[1].notes), ress[1].notes
+    for k in (0, 2):
+        assert not any(n.startswith("warm_start_rejected")
+                       for n in ress[k].notes)
+        ref = solve_lp_np(c, A, bl, bu, ubs[k], warm_start=base)
+        _assert_lane_parity(ress[k], ref, lane=f"lane {k}")

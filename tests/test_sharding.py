@@ -1,9 +1,7 @@
 """Sharding rules: divisibility fallbacks, cache pspecs, HLO analyzer."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.distributed.hlo_analysis import (collective_bytes, hlo_stats,
@@ -124,7 +122,6 @@ def test_hlo_stats_counts_scanned_dots():
 
 def test_collective_parser_on_sharded_module():
     mesh = jax.make_mesh((1,), ("x",))
-    from jax.sharding import NamedSharding
     x = jnp.ones((8, 8))
 
     @jax.jit

@@ -1,7 +1,5 @@
 """End-to-end system behaviour: training loss decreases, crash/resume is
 bit-deterministic, serving completes, hierarchy+engine integration."""
-import subprocess
-import sys
 
 import numpy as np
 import pytest
