@@ -1,0 +1,151 @@
+"""Concurrent-serving benchmark — acceptance instrument for the PR-10
+thread-safety work (shared QCache under concurrent engine sessions).
+
+A repeat-query flight runs over ONE resident engine: T worker threads
+each solve the same small set of overlapping queries through private
+``engine.session`` handles sharing the hierarchy and the QCache.  The
+claim/wait populate protocol must keep cold solves at one per distinct
+query (no duplicate descents), every thread must see the same validated
+package, and the instrumented cache lock reports how contended the
+shared path actually is (hold time per acquisition is the REPRO011
+discipline made measurable: only probes/publishes under the lock,
+never solves).
+
+Reported per profile in ``BENCH_concurrency.json``:
+
+* ``lock`` — ``QCache.lock_stats()``: acquisitions, contended count,
+  total wait/hold seconds (and derived mean hold per acquisition);
+* ``cache`` — hit/miss/store counters for the whole flight
+  (cold solves == distinct queries is asserted, not just reported);
+* wall time of the concurrent flight vs the sequential flight of the
+  same (thread x query) work list.
+
+CLI (the smoke profile is wired into CI):
+
+    python -m benchmarks.concurrency_bench --smoke
+    python -m benchmarks.concurrency_bench --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.engine import PackageQueryEngine
+from repro.core.hardness import Q2_TPCH, Q4_TPCH, column_stats, instantiate
+from repro.core.qcache import QCache
+from repro.data.synth_tables import make_table
+from repro.runtime.racecheck import run_threads
+
+BENCH_PATH = Path(__file__).resolve().parent.parent \
+    / "BENCH_concurrency.json"
+ATTRS = ["price", "quantity", "discount", "tax"]
+
+
+def _pkg(res):
+    order = np.argsort(res.idx, kind="stable")
+    return np.asarray(res.idx)[order], np.asarray(res.mult)[order]
+
+
+def _build(table, *, d_f, alpha):
+    eng = PackageQueryEngine(table, ATTRS, d_f=d_f, alpha=alpha, seed=0,
+                             cache=QCache())
+    eng.partition()
+    return eng
+
+
+def run(full: bool = False) -> dict:
+    n = 200_000 if full else 20_000
+    alpha = 4_000 if full else 1_000
+    d_f = 50 if full else 20
+    threads = 8 if full else 4
+    ilp_kw = dict(max_nodes=200, time_limit_s=60)
+
+    table = make_table("tpch", n, seed=1)
+    stats = column_stats(table, ATTRS)
+    queries = [instantiate(Q2_TPCH, stats, 2.0),
+               instantiate(Q4_TPCH, stats, 2.0)]
+    work = [(t, queries[t % len(queries)]) for t in range(threads)]
+
+    # -- sequential reference: same work list, one thread
+    seq = _build(table, d_f=d_f, alpha=alpha)
+    t0 = time.perf_counter()
+    ref = {}
+    for t, q in work:
+        res = seq.session(seed=t % len(queries)).solve(
+            q, ilp_kwargs=ilp_kw)
+        assert res.feasible, res.status
+        ref.setdefault(t % len(queries), res)
+    seq_s = time.perf_counter() - t0
+
+    # -- concurrent flight: shared engine + cache, per-thread sessions
+    conc = _build(table, d_f=d_f, alpha=alpha)
+
+    def body(t, q):
+        def runner():
+            return conc.session(seed=t % len(queries)).solve(
+                q, ilp_kwargs=ilp_kw)
+
+        return runner
+
+    t0 = time.perf_counter()
+    results = run_threads([body(t, q) for t, q in work], timeout_s=600)
+    conc_s = time.perf_counter() - t0
+
+    for (t, _q), res in zip(work, results):
+        assert res.feasible, f"thread {t}: {res.status}"
+        want_i, want_m = _pkg(ref[t % len(queries)])
+        got_i, got_m = _pkg(res)
+        assert np.array_equal(got_i, want_i), f"thread {t} parity"
+        assert np.array_equal(got_m, want_m), f"thread {t} parity"
+
+    cs = conc.cache.stats_snapshot()
+    assert cs.stores == len(queries), \
+        f"duplicate cold solves: {cs.stores} stores for " \
+        f"{len(queries)} distinct queries"
+    ls = conc.cache.lock_stats()
+    mean_hold_us = 1e6 * ls["hold_s"] / max(ls["acquisitions"], 1)
+
+    entry = {
+        "n": n, "alpha": alpha, "d_f": d_f, "threads": threads,
+        "full": bool(full),
+        "sequential_s": round(seq_s, 4),
+        "concurrent_s": round(conc_s, 4),
+        "lock": {"acquisitions": ls["acquisitions"],
+                 "contended": ls["contended"],
+                 "wait_s": round(ls["wait_s"], 6),
+                 "hold_s": round(ls["hold_s"], 6),
+                 "mean_hold_us": round(mean_hold_us, 2)},
+        "cache": cs.as_dict(),
+        "parity": True,
+    }
+    print(f"concurrency_flight,{conc_s * 1e6 / threads:.0f},"
+          f"threads={threads} seq={seq_s:.2f}s conc={conc_s:.2f}s "
+          f"stores={cs.stores} lock_acq={ls['acquisitions']} "
+          f"contended={ls['contended']} "
+          f"mean_hold_us={mean_hold_us:.1f}", flush=True)
+
+    data = {}
+    if BENCH_PATH.exists():
+        data = json.loads(BENCH_PATH.read_text())
+    data["smoke" if not full else "full"] = entry
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"# wrote {BENCH_PATH}", flush=True)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast profile (CI gate)")
+    ap.add_argument("--full", action="store_true",
+                    help="acceptance-scale run")
+    args = ap.parse_args()
+    run(full=args.full and not args.smoke)
+
+
+if __name__ == "__main__":
+    main()

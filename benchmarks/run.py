@@ -18,9 +18,9 @@ from repro.hostdev import ensure_host_devices
 ensure_host_devices()
 
 from benchmarks import (ablations, analysis_bench, batch_lp, cache_bench,
-                        dual_reducer_bench, grid, infeasibility,
-                        partitioning, pds_scaling, ratio_score, roofline,
-                        scaling, warm_start)
+                        concurrency_bench, dual_reducer_bench, grid,
+                        infeasibility, partitioning, pds_scaling,
+                        ratio_score, roofline, scaling, warm_start)
 from benchmarks.common import ROWS
 
 MODULES = {
@@ -34,6 +34,7 @@ MODULES = {
     "miniexp7_8_dual_reducer": dual_reducer_bench,
     "appc_warm_start": warm_start,
     "cache": cache_bench,
+    "concurrency": concurrency_bench,
     "batch_lp": batch_lp,
     "roofline": roofline,
     "analysis": analysis_bench,

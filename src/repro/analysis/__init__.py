@@ -10,6 +10,10 @@ Two layers, one CLI (``python -m repro.analysis``):
   collective bytes within declared budgets, dtype preservation.
 * :mod:`repro.analysis.lint` is an AST pass encoding the repo's paid-for
   footgun classes as named REPRO rules with per-rule suppressions.
+* :mod:`repro.analysis.concurrency` extends the lint with the
+  shared-state contracts of the serving path (REPRO008-012):
+  ``__guarded_by__`` declarations, check-then-act cache races,
+  unlocked process-globals, dispatch-under-lock, torn stats.
 
 The CLI gates CI with a baseline ratchet (``analysis/baseline.json``):
 new violations fail, pinned ones must only shrink.  See docs/ANALYSIS.md.
@@ -19,9 +23,13 @@ from repro.analysis.report import (Violation, compare_baseline,
                                    save_baseline, write_report)
 from repro.analysis.lint import (RULES, lint_file, lint_paths, lint_source,
                                  DEFAULT_LINT_DIRS)
+from repro.analysis.concurrency import (ALL_RULES, CONCURRENCY_RULES,
+                                        check_file, check_paths,
+                                        check_source)
 
 __all__ = [
     "Violation", "compare_baseline", "count_by_key", "load_baseline",
     "save_baseline", "write_report", "RULES", "lint_file", "lint_paths",
-    "lint_source", "DEFAULT_LINT_DIRS",
+    "lint_source", "DEFAULT_LINT_DIRS", "ALL_RULES", "CONCURRENCY_RULES",
+    "check_file", "check_paths", "check_source",
 ]

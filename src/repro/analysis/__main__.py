@@ -53,7 +53,7 @@ def main(argv=None) -> int:
         from repro import hostdev
         hostdev.ensure_host_devices()
 
-    from repro.analysis import lint, report
+    from repro.analysis import concurrency, lint, report
 
     wall = {}
     t0 = time.time()
@@ -65,6 +65,17 @@ def main(argv=None) -> int:
     wall["lint"] = round(time.time() - t0, 3)
     print(f"[analysis] lint: {files_linted} files, "
           f"{len(lint_violations)} violations ({wall['lint']}s)")
+
+    # concurrency contracts ride the lint bucket (same suppression /
+    # ratchet machinery); they run in every grid mode incl. 'none'.
+    t0 = time.time()
+    conc_violations, _ = concurrency.check_paths(lint_dirs,
+                                                 root=args.root)
+    lint_violations = list(lint_violations) + list(conc_violations)
+    wall["concurrency"] = round(time.time() - t0, 3)
+    print(f"[analysis] concurrency: {files_linted} files, "
+          f"{len(conc_violations)} violations "
+          f"({wall['concurrency']}s)")
 
     contract_violations = []
     records = []

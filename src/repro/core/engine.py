@@ -67,6 +67,23 @@ class PackageQueryEngine:
     def n(self) -> int:
         return self.table.num_rows
 
+    def session(self, seed: int = 0) -> "PackageQueryEngine":
+        """A per-session engine sharing this engine's table, hierarchy
+        and cross-query cache, with a PRIVATE rng.
+
+        The serving-layer shape: one resident engine (partitioned once)
+        serves many concurrent sessions — ``engine.rng`` is the only
+        unshareable state (a numpy Generator is not thread-safe and its
+        draw order must stay per-session deterministic), so each session
+        gets its own seeded Generator while the heavy shared structures
+        (Relation, Hierarchy, QCache — each thread-safe or read-only
+        after partition) stay common.
+        """
+        import copy
+        s = copy.copy(self)
+        s.rng = np.random.default_rng(seed)
+        return s
+
     def partition(self) -> "PackageQueryEngine":
         t0 = time.time()
         self.hierarchy = Hierarchy(self.table, self.attrs, d_f=self.d_f,

@@ -44,6 +44,7 @@ per dispatch on the jax path; per call on the numpy path).
 """
 from __future__ import annotations
 
+import threading
 from typing import List, Optional
 
 import numpy as np
@@ -86,6 +87,15 @@ _COMPILE_CACHE = BoundedStepCache(maxsize=_CACHE_MAXSIZE)
 _STATS = {"dispatches": 0, "instances": 0, "np_fallbacks": 0,
           "batched_pivots": 0, "prep_hits": 0, "prep_misses": 0}
 
+_STATS_LOCK = threading.Lock()
+_PREP_LOCK = threading.Lock()
+
+# Registered with the static concurrency checker (REPRO010): mutations
+# of these module globals must hold the matching lock (_STATS under
+# _STATS_LOCK, _PREPPED under _PREP_LOCK).  Lock order: _PREP_LOCK may
+# take _STATS_LOCK; never the reverse.
+SHARED_MUTABLE = ("_STATS", "_PREPPED")
+
 
 def batch_cache_stats() -> dict:
     """Counters of the compile-class cache (observability API)."""
@@ -93,13 +103,15 @@ def batch_cache_stats() -> dict:
 
 
 def batch_stats() -> dict:
-    """Dispatch counters of the batched engine."""
-    return dict(_STATS)
+    """Dispatch counters of the batched engine (atomic snapshot)."""
+    with _STATS_LOCK:
+        return dict(_STATS)
 
 
 def reset_batch_stats() -> None:
-    for k in _STATS:
-        _STATS[k] = 0
+    with _STATS_LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
 
 
 def _pow2(v: int, floor: int) -> int:
@@ -272,34 +284,42 @@ def _prep_shared(c, A_t, bl, bu, m_pad: int, n_pad: int) -> dict:
     wave; re-padding and re-transferring the matrix per dispatch costs
     more than the solve for small flights, so prepared forms are cached
     by content (a memcmp-style compare — in-place caller mutations are
-    therefore safe) and bounded FIFO."""
-    for e in _PREPPED:
-        if (e["m_pad"] == m_pad and e["n_pad"] == n_pad
-                and e["c"].shape == c.shape and e["A_t"].shape == A_t.shape
-                and np.array_equal(e["c"], c)
-                and np.array_equal(e["A_t"], A_t)
-                and np.array_equal(e["bl"], bl)
-                and np.array_equal(e["bu"], bu)):
-            _STATS["prep_hits"] += 1
-            return e
-    _STATS["prep_misses"] += 1
-    m, n = A_t.shape
-    N_pad = n_pad + m_pad
-    scale = row_scaling(A_t)
-    cf = np.zeros(N_pad)
-    cf[:n] = c
-    A = np.zeros((m_pad, N_pad))
-    A[:m, :n] = -(A_t * scale[:, None])
-    A[:, n_pad:] = np.eye(m_pad)
-    e = {"c": c.copy(), "A_t": A_t.copy(), "bl": bl.copy(),
-         "bu": bu.copy(), "m_pad": m_pad, "n_pad": n_pad,
-         "scale": scale, "cf": cf, "A": A,
-         "bls": bl * scale, "bus": bu * scale,
-         "cf_dev": jnp.asarray(cf), "A_dev": jnp.asarray(A)}
-    _PREPPED.append(e)
-    if len(_PREPPED) > _PREP_MAX:
-        _PREPPED.pop(0)
-    return e
+    therefore safe) and bounded FIFO.
+
+    ``_PREP_LOCK`` is held for the whole scan-build-insert (the build is
+    numpy padding, cheap relative to a solve), so the check-then-act is
+    one atomic scope and concurrent waves share one prepared form."""
+    with _PREP_LOCK:
+        for e in _PREPPED:
+            if (e["m_pad"] == m_pad and e["n_pad"] == n_pad
+                    and e["c"].shape == c.shape
+                    and e["A_t"].shape == A_t.shape
+                    and np.array_equal(e["c"], c)
+                    and np.array_equal(e["A_t"], A_t)
+                    and np.array_equal(e["bl"], bl)
+                    and np.array_equal(e["bu"], bu)):
+                with _STATS_LOCK:
+                    _STATS["prep_hits"] += 1
+                return e
+        with _STATS_LOCK:
+            _STATS["prep_misses"] += 1
+        m, n = A_t.shape
+        N_pad = n_pad + m_pad
+        scale = row_scaling(A_t)
+        cf = np.zeros(N_pad)
+        cf[:n] = c
+        A = np.zeros((m_pad, N_pad))
+        A[:m, :n] = -(A_t * scale[:, None])
+        A[:, n_pad:] = np.eye(m_pad)
+        e = {"c": c.copy(), "A_t": A_t.copy(), "bl": bl.copy(),
+             "bu": bu.copy(), "m_pad": m_pad, "n_pad": n_pad,
+             "scale": scale, "cf": cf, "A": A,
+             "bls": bl * scale, "bus": bu * scale,
+             "cf_dev": jnp.asarray(cf), "A_dev": jnp.asarray(A)}
+        _PREPPED.append(e)
+        if len(_PREPPED) > _PREP_MAX:
+            _PREPPED.pop(0)
+        return e
 
 
 def _validate_warm_batch(A, cf, l_rows, u_rows, tol_rows, WB, HT):
@@ -453,18 +473,21 @@ def solve_lp_batch(c, A_t, bl, bu, ub_batch, lb_batch=None, *,
     if len(warm_list) != K:
         raise ValueError(f"warm_starts length {len(warm_list)} != K={K}")
 
-    _STATS["instances"] += K
+    with _STATS_LOCK:
+        _STATS["instances"] += K
     if backend == "np" or (backend == "auto" and K <= _AUTO_NP_MAX):
         # sequential fallback: per-call budget charging, identical to the
         # existing caller loops (this is what makes W=1 bit-compatible)
-        _STATS["np_fallbacks"] += 1
+        with _STATS_LOCK:
+            _STATS["np_fallbacks"] += 1
         return [solve_lp_np(c, A_t, bl, bu, ub_arr[k], lb=lb_arr[k],
                             max_iters=max_iters, tol=float(tol_arr[k]),
                             warm_start=warm_list[k], budget=budget,
                             monitor=monitor)
                 for k in range(K)]
 
-    _STATS["dispatches"] += 1
+    with _STATS_LOCK:
+        _STATS["dispatches"] += 1
     # ---- shared standard form, padded to the (m, n, K) shape class ----
     # m rounds up to pow2 (rows are tiny); n and K round up to multiples
     # of _N_STEP / _K_STEP — on a single core the vmapped body's cost is
@@ -601,7 +624,8 @@ def solve_lp_batch(c, A_t, bl, bu, ub_batch, lb_batch=None, *,
         [au[:, :n], au[:, n_pad:n_pad + m]], axis=1) != 0.0
 
     spent = int(out[0, 2 * N_pad + 2 * m_pad + 5])
-    _STATS["batched_pivots"] += spent
+    with _STATS_LOCK:
+        _STATS["batched_pivots"] += spent
     shared_hit = spent >= pivot_cap
     if budget is not None:
         budget.charge_pivots(spent)

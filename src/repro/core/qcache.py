@@ -50,11 +50,14 @@ Correctness contract (what a consumer may rely on):
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from types import SimpleNamespace
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.runtime import racecheck
 
 # Default artifact budget: candidate-id sets dominate; 64 MiB holds
 # ~2000 distinct alpha=100k query entries' worth of int64 ids.
@@ -182,7 +185,21 @@ class QCache:
     hierarchy.  ``reuse_packages=False`` disables the exact-hit package
     fast path (every hit then re-solves Dual Reducer over the cached
     candidate set — the pure artifact-reuse mode).
+
+    Concurrency: every structure (entries, stats, registration set, the
+    in-flight populate claims) is guarded by one reentrant instrumented
+    lock, so concurrent sessions share the cache safely and the lock's
+    contention/hold-time counters feed ``benchmarks/concurrency_bench``.
+    Cold solves are NEVER run under the lock (the REPRO011 discipline —
+    a descent is seconds-long); instead :meth:`begin_populate` claims a
+    key with an in-flight event, the owner solves outside the lock and
+    :meth:`store`s, and concurrent same-key sessions
+    :meth:`wait_populate` then re-probe — the atomic get-or-populate
+    protocol (:meth:`get_or_populate` packages it).
     """
+
+    __guarded_by__ = {"_entries": "_lock", "stats": "_lock",
+                      "_registered": "_lock", "_inflight": "_lock"}
 
     def __init__(self, max_bytes: int = DEFAULT_MAX_BYTES, *,
                  reuse_packages: bool = True,
@@ -197,32 +214,62 @@ class QCache:
         self.stats = CacheStats()
         self._entries: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
         self._registered: set = set()
+        self._lock = racecheck.InstrumentedRLock("qcache")
+        self._inflight: Dict[tuple, threading.Event] = {}
 
     # ------------------------------------------------------------ admin
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def entries(self):
         """(fingerprint, signature, entry) triples (test/debug API)."""
-        return [(fp, sig, e) for (fp, sig), e in self._entries.items()]
+        with self._lock:
+            return [(fp, sig, e) for (fp, sig), e in self._entries.items()]
 
     def register(self, hier) -> str:
         """Bind a hierarchy: returns its fingerprint and installs the
-        append-invalidation hook (idempotent per hierarchy object)."""
-        if id(hier) not in self._registered:
-            hier.add_invalidation_hook(self._on_append)
-            self._registered.add(id(hier))
+        append-invalidation hook (idempotent per hierarchy object).
+
+        The hook install happens under the cache lock; ``Hierarchy``
+        keeps no lock of its own, so QCache._lock stays a leaf in the
+        lock order (see docs/CONCURRENCY.md)."""
+        with self._lock:
+            if id(hier) not in self._registered:
+                hier.add_invalidation_hook(self._on_append)
+                self._registered.add(id(hier))
         return hier.fingerprint
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.stats.bytes = 0
+        with self._lock:
+            self._entries.clear()
+            self.stats.bytes = 0
+
+    def stats_snapshot(self) -> CacheStats:
+        """Atomic copy of the counters — never torn mid-update."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
+
+    def note_fallback(self) -> None:
+        """A hit was abandoned by validation (cold path taken)."""
+        with self._lock:
+            self.stats.fallbacks += 1
+
+    def lock_stats(self) -> dict:
+        """Contention/hold-time counters of the cache lock."""
+        return self._lock.stats()
 
     # ----------------------------------------------------------- lookup
     def lookup(self, fingerprint: str, sig) -> Optional[CacheHit]:
         """Exact-signature hit, else the tightest complete superset
         (subsumption): among cached signatures that contain ``sig``,
         the one with the fewest layer-0 candidates wins."""
+        racecheck.checkpoint("qcache.lookup")
+        with self._lock:
+            return self._lookup_locked(fingerprint, sig)
+
+    @racecheck.guarded_by("_lock")
+    def _lookup_locked(self, fingerprint: str, sig) -> Optional[CacheHit]:
         key = (fingerprint, sig)
         entry = self._entries.get(key)
         if entry is not None:
@@ -251,6 +298,66 @@ class QCache:
         self.stats.contained_hits += 1
         return CacheHit(best[1], exact=False)
 
+    # ------------------------------------------------- populate protocol
+    def begin_populate(self, fingerprint: str, sig) -> bool:
+        """Claim the cold solve for ``(fingerprint, sig)``.  True means
+        the caller owns the populate and MUST call :meth:`end_populate`
+        (a ``finally`` obligation); False means another session is
+        already solving the same key — :meth:`wait_populate` for it."""
+        key = (fingerprint, sig)
+        with self._lock:
+            if key in self._inflight:
+                return False
+            self._inflight[key] = threading.Event()
+            return True
+
+    def end_populate(self, fingerprint: str, sig) -> None:
+        """Release the claim and wake waiters (store or not — a failed
+        solve releases too, and waiters re-probe and miss)."""
+        with self._lock:
+            ev = self._inflight.pop((fingerprint, sig), None)
+        if ev is not None:
+            ev.set()
+
+    def wait_populate(self, fingerprint: str, sig,
+                      timeout: Optional[float] = None) -> bool:
+        """Block until an in-flight populate of the key (if any)
+        finishes; True unless the timeout expired first."""
+        with self._lock:
+            ev = self._inflight.get((fingerprint, sig))
+        if ev is None:
+            return True
+        return racecheck.wait_event(ev, "qcache.wait_populate", timeout)
+
+    def get_or_populate(self, fingerprint: str, sig, solve):
+        """Atomic get-or-populate: returns ``("hit", CacheHit)`` or
+        ``("solved", solve())``.  Exactly one caller runs ``solve()``
+        per cold key; concurrent same-key callers wait and take the
+        hit.  ``solve`` runs OUTSIDE the lock and is expected to
+        :meth:`store` before returning (a non-storing solve is legal —
+        waiters then re-probe, miss, and one of them solves next)."""
+        key = (fingerprint, sig)
+        while True:
+            racecheck.checkpoint("qcache.get_or_populate")
+            owner_ev = None
+            with self._lock:
+                hit = self._lookup_locked(fingerprint, sig)
+                if hit is not None:
+                    return "hit", hit
+                ev = self._inflight.get(key)
+                if ev is None:
+                    owner_ev = self._inflight[key] = threading.Event()
+            if owner_ev is not None:
+                break
+            racecheck.wait_event(ev, "qcache.wait_inflight")
+        try:
+            value = solve()
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+            owner_ev.set()
+        return "solved", value
+
     # ------------------------------------------------------------ store
     def store(self, fingerprint: str, sig, *, hier,
               cands: Dict[int, np.ndarray],
@@ -265,6 +372,9 @@ class QCache:
         ``(S_used, basis, at_upper, obj)``; ``dr_warm`` the lp1
         basis/at_upper pair (or None); ``package`` the validated final
         ``(idx, mult, obj)``.
+
+        The numpy grouping/copy work runs outside the lock; only the
+        insert + eviction mutate shared state.
         """
         grouped: Dict[int, Dict[int, np.ndarray]] = {}
         expected: Dict[int, int] = {}
@@ -298,15 +408,18 @@ class QCache:
             entry.package_obj = float(obj)
         entry.nbytes = entry.measure()
         key = (fingerprint, sig)
-        old = self._entries.pop(key, None)
-        if old is not None:
-            self.stats.bytes -= old.nbytes
-        self._entries[key] = entry
-        self.stats.bytes += entry.nbytes
-        self.stats.stores += 1
-        self._evict(keep=key)
+        racecheck.checkpoint("qcache.store")
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.stats.bytes -= old.nbytes
+            self._entries[key] = entry
+            self.stats.bytes += entry.nbytes
+            self.stats.stores += 1
+            self._evict(keep=key)
         return entry
 
+    @racecheck.guarded_by("_lock")
     def _evict(self, keep: tuple) -> None:
         """LRU-evict by artifact bytes until under budget (the entry
         just stored survives even if alone over budget — a cache that
@@ -326,18 +439,19 @@ class QCache:
         hierarchy.  Entries that lost any group stop serving hits."""
         fp = hier.fingerprint
         ancestors = hier.leaf_ancestors(touched_leaves)
-        for (efp, _sig), entry in self._entries.items():
-            if efp != fp:
-                continue
-            for l, gids in ancestors.items():
-                d = entry.cands.get(l)
-                if not d:
+        with self._lock:
+            for (efp, _sig), entry in self._entries.items():
+                if efp != fp:
                     continue
-                for g in gids:
-                    arr = d.pop(int(g), None)
-                    if arr is not None:
-                        removed = arr.nbytes + _ENTRY_OVERHEAD
-                        entry.nbytes -= removed
-                        self.stats.bytes -= removed
-                        self.stats.invalidated_groups += 1
-                        entry.complete = False
+                for l, gids in ancestors.items():
+                    d = entry.cands.get(l)
+                    if not d:
+                        continue
+                    for g in gids:
+                        arr = d.pop(int(g), None)
+                        if arr is not None:
+                            removed = arr.nbytes + _ENTRY_OVERHEAD
+                            entry.nbytes -= removed
+                            self.stats.bytes -= removed
+                            self.stats.invalidated_groups += 1
+                            entry.complete = False

@@ -374,7 +374,7 @@ class Model:
             ks, vs = [], []
             L = self.cfg.num_layers
             for l in range(L):
-                lp = jax.tree.map(lambda a: a[l],
+                lp = jax.tree.map(lambda a, l=l: a[l],
                                   params["decoder"]["layers"])
                 k, v = attn.gqa_project_kv(lp["xattn"], enc, pos,
                                            self.cfg.rope_theta)

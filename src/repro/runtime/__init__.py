@@ -1,4 +1,5 @@
 from repro.runtime.coordinator import Coordinator, WorkerState
 from repro.runtime import faults
+from repro.runtime import racecheck
 
-__all__ = ["Coordinator", "WorkerState", "faults"]
+__all__ = ["Coordinator", "WorkerState", "faults", "racecheck"]

@@ -14,9 +14,15 @@ when no injector is active:
 * ``dist.shard`` — raise inside the ``solve_lp_dist`` pivot loop,
   standing in for a dead mesh shard (forcing the single-host fallback).
 
-Determinism: firing depends only on the injector's seed and the per-site
-opportunity counter (``after`` skips, ``times`` caps, ``prob`` draws from
-the seeded rng), so a failing resilience test replays exactly.
+Determinism — now per *thread*: each thread that touches an injector is
+lazily assigned a stream in registration order; stream 0 draws from
+``SeedSequence(seed)`` (bit-identical to the historical single-thread
+``default_rng(seed)`` behaviour) and stream ``k`` from
+``SeedSequence(seed, spawn_key=(k-1,))``.  Opportunity counters
+(``after`` skips, ``times`` caps) and probability draws are per-stream,
+so concurrent sessions see independent, seed-reproducible fault
+schedules instead of racing over one shared rng.  Aggregate counters
+(``fire_count``, ``log``) are kept under the injector lock.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ import threading
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+from repro.runtime import racecheck
 
 # ------------------------------------------------------------ site names
 
@@ -40,8 +48,9 @@ class FaultSpec:
     """When/how one site fires.
 
     ``after`` opportunities are skipped, then up to ``times`` fires (None
-    = unlimited), each gated by ``prob`` (drawn from the injector's
-    seeded rng).  ``scale`` is the magnitude for perturbation sites.
+    = unlimited), each gated by ``prob`` — all evaluated against the
+    *calling thread's* stream, so each thread replays its own schedule.
+    ``scale`` is the magnitude for perturbation sites.
     """
     prob: float = 1.0
     times: Optional[int] = 1
@@ -50,104 +59,199 @@ class FaultSpec:
     message: str = "injected fault"
 
 
-class FaultInjector:
-    def __init__(self, seed: int = 0):
-        self.seed = int(seed)
-        self.rng = np.random.default_rng(seed)
-        self.specs: Dict[str, FaultSpec] = {}
+class _Stream:
+    """Per-thread rng + opportunity counters (thread-confined: only the
+    owning thread ever touches ``rng``/``seen``/``fired``)."""
+
+    __slots__ = ("idx", "rng", "seen", "fired")
+
+    def __init__(self, idx: int, seed: int):
+        self.idx = idx
+        if idx == 0:
+            ss = np.random.SeedSequence(seed)
+        else:
+            ss = np.random.SeedSequence(seed, spawn_key=(idx - 1,))
+        self.rng = np.random.default_rng(ss)
         self.seen: Dict[str, int] = {}
         self.fired: Dict[str, int] = {}
-        self.log: List[Tuple[str, int]] = []
+
+
+class FaultInjector:
+
+    __guarded_by__ = {"specs": "_lock", "seen": "_lock", "fired": "_lock",
+                      "log": "_lock", "_streams": "_lock"}
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self.specs: Dict[str, FaultSpec] = {}
+        # Aggregate (all-thread) counters; per-thread schedules live on
+        # the thread's _Stream.
+        self.seen: Dict[str, int] = {}
+        self.fired: Dict[str, int] = {}
+        self.log: List[Tuple[str, int, int]] = []
         self._lock = threading.Lock()
+        self._tls = threading.local()
+        self._streams: List[_Stream] = []
+
+    # ---------------------------------------------------------- streams
+
+    def _stream(self) -> _Stream:
+        st = getattr(self._tls, "stream", None)
+        if st is None:
+            with self._lock:
+                st = _Stream(len(self._streams), self.seed)
+                self._streams.append(st)
+            self._tls.stream = st
+        return st
+
+    @property
+    def rng(self) -> np.random.Generator:
+        """The calling thread's generator (compat accessor)."""
+        return self._stream().rng
+
+    def thread_index(self) -> int:
+        """Registration index of the calling thread's stream."""
+        return self._stream().idx
+
+    # ------------------------------------------------------------ set-up
 
     def arm(self, site: str, **kw) -> "FaultInjector":
-        self.specs[site] = FaultSpec(**kw)
-        self.seen[site] = 0
-        self.fired[site] = 0
+        with self._lock:
+            self.specs[site] = FaultSpec(**kw)
+            self.seen[site] = 0
+            self.fired[site] = 0
         return self
 
     def fire_count(self, site: str) -> int:
-        return self.fired.get(site, 0)
+        """Total fires across all threads."""
+        with self._lock:
+            return self.fired.get(site, 0)
+
+    def stream_fire_count(self, site: str) -> int:
+        """Fires seen by the calling thread's own stream."""
+        return self._stream().fired.get(site, 0)
+
+    # ------------------------------------------------------------ firing
 
     def _should_fire(self, site: str) -> Optional[FaultSpec]:
         spec = self.specs.get(site)
         if spec is None:
             return None
+        st = self._stream()
+        racecheck.checkpoint(f"faults:{site}")
+        # Schedule decisions are thread-confined (per-stream counters and
+        # rng); only the aggregate tallies need the lock.
+        k = st.seen.get(site, 0)
+        st.seen[site] = k + 1
         with self._lock:
-            k = self.seen.get(site, 0)
-            self.seen[site] = k + 1
-            if k < spec.after:
-                return None
-            if spec.times is not None and \
-                    self.fired.get(site, 0) >= spec.times:
-                return None
-            if spec.prob < 1.0 and self.rng.random() >= spec.prob:
-                return None
+            self.seen[site] = self.seen.get(site, 0) + 1
+        if k < spec.after:
+            return None
+        if spec.times is not None and st.fired.get(site, 0) >= spec.times:
+            return None
+        if spec.prob < 1.0 and st.rng.random() >= spec.prob:
+            return None
+        st.fired[site] = st.fired.get(site, 0) + 1
+        with self._lock:
             self.fired[site] = self.fired.get(site, 0) + 1
-            self.log.append((site, k))
+            self.log.append((site, st.idx, k))
         return spec
 
     def maybe_raise(self, site: str, exc=OSError) -> None:
         spec = self._should_fire(site)
         if spec is not None:
             raise exc(f"{spec.message} [site={site} "
-                      f"fire={self.fired[site]}]")
+                      f"fire={self.fire_count(site)}]")
 
     def perturb(self, site: str, arr: np.ndarray) -> np.ndarray:
-        """Deterministic additive perturbation (seeded rng, call-order
-        reproducible) when the site is armed; identity otherwise."""
+        """Deterministic additive perturbation (per-thread seeded rng,
+        call-order reproducible) when the site is armed; identity
+        otherwise."""
         spec = self._should_fire(site)
         if spec is None:
             return arr
-        return arr + spec.scale * self.rng.standard_normal(arr.shape)
+        return arr + spec.scale * self._stream().rng.standard_normal(
+            arr.shape)
 
 
 # -------------------------------------------------- process-global hooks
 
+# Registered with the static concurrency checker: rebinding the active
+# injector must hold _ACTIVE_LOCK; thread-scoped activations live on
+# _SCOPED and never race.
+SHARED_MUTABLE = ("_ACTIVE",)
+
 _ACTIVE: Optional[FaultInjector] = None
+_ACTIVE_LOCK = threading.Lock()
+_SCOPED = threading.local()      # .stack: per-thread activation stack
 
 
 def get() -> Optional[FaultInjector]:
+    """The effective injector for the calling thread: innermost
+    thread-scoped activation first, then the process-global one."""
+    stack = getattr(_SCOPED, "stack", None)
+    if stack:
+        return stack[-1]
     return _ACTIVE
 
 
 def activate(inj: Optional[FaultInjector]) -> Optional[FaultInjector]:
     global _ACTIVE
-    prev, _ACTIVE = _ACTIVE, inj
+    with _ACTIVE_LOCK:
+        prev, _ACTIVE = _ACTIVE, inj
     return prev
 
 
 @contextlib.contextmanager
 def injected(seed: int = 0,
-             arms: Optional[Dict[str, dict]] = None
-             ) -> Iterator[FaultInjector]:
+             arms: Optional[Dict[str, dict]] = None,
+             scope: str = "process") -> Iterator[FaultInjector]:
     """``with faults.injected(seed=7, arms={faults.BINV: {...}}) as inj``
     — installs a fresh injector for the block, restoring the previous
-    one (usually None) on exit."""
+    one on exit.  Reentrant: nested blocks stack and unwind correctly.
+    ``scope="thread"`` confines the activation to the calling thread
+    (other threads keep seeing the process-global injector, if any).
+    """
+    if scope not in ("process", "thread"):
+        raise ValueError(f"scope must be 'process' or 'thread', "
+                         f"got {scope!r}")
     inj = FaultInjector(seed)
     for site, kw in (arms or {}).items():
         inj.arm(site, **kw)
-    prev = activate(inj)
-    try:
-        yield inj
-    finally:
-        activate(prev)
+    if scope == "thread":
+        stack = getattr(_SCOPED, "stack", None)
+        if stack is None:
+            stack = _SCOPED.stack = []
+        stack.append(inj)
+        try:
+            yield inj
+        finally:
+            stack.pop()
+    else:
+        prev = activate(inj)
+        try:
+            yield inj
+        finally:
+            activate(prev)
 
 
 def maybe_raise(site: str, exc=OSError) -> None:
     """Production-side hook: no-op unless an injector is active."""
-    if _ACTIVE is not None:
-        _ACTIVE.maybe_raise(site, exc)
+    inj = get()
+    if inj is not None:
+        inj.maybe_raise(site, exc)
 
 
 def perturb(site: str, arr: np.ndarray) -> np.ndarray:
-    if _ACTIVE is None:
+    inj = get()
+    if inj is None:
         return arr
-    return _ACTIVE.perturb(site, arr)
+    return inj.perturb(site, arr)
 
 
 def fire_count(site: str) -> int:
-    return 0 if _ACTIVE is None else _ACTIVE.fire_count(site)
+    inj = get()
+    return 0 if inj is None else inj.fire_count(site)
 
 
 # ----------------------------------------------------------- test double

@@ -9,6 +9,7 @@ configs end-to-end (examples/serve_lm.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List
 
 import jax
@@ -27,6 +28,11 @@ class Generation:
 
 
 class ServingEngine:
+
+    # Sampling state: concurrent generate_batch calls split the engine
+    # key under the lock, so each draw consumes a distinct subkey.
+    __guarded_by__ = {"rng": "_lock"}
+
     def __init__(self, cfg: ArchConfig, params, *, cache_len: int = 512,
                  seed: int = 0):
         self.cfg = cfg
@@ -34,7 +40,14 @@ class ServingEngine:
         self.params = params
         self.cache_len = cache_len
         self.rng = jax.random.PRNGKey(seed)
+        self._lock = threading.Lock()
         self._decode = jax.jit(self.model.decode_step)
+
+    def _next_key(self):
+        """Split off one sampling subkey (atomic rng advance)."""
+        with self._lock:
+            self.rng, k = jax.random.split(self.rng)
+        return k
 
     def generate_batch(self, prompts: np.ndarray, max_new: int,
                        temperature: float = 0.0) -> np.ndarray:
@@ -51,7 +64,7 @@ class ServingEngine:
         tok = None
         for i in range(max_new):
             if temperature > 0:
-                self.rng, k = jax.random.split(self.rng)
+                k = self._next_key()
                 tok = jax.random.categorical(k, logits / temperature, axis=-1)
             else:
                 tok = jnp.argmax(logits, axis=-1)

@@ -26,6 +26,7 @@ last ``guard.SolveReport`` is kept on ``last_report`` for observability.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -86,6 +87,12 @@ class _ColumnStore:
     def view(self) -> Dict[str, np.ndarray]:
         return {k: v[:self._len] for k, v in self._cols.items()}
 
+    def snapshot(self, n: int) -> Dict[str, np.ndarray]:
+        """Copied column prefix of length ``n`` — safe to read after the
+        caller drops the lock (concurrent appends touch other rows, but
+        a capacity-doubling re-allocation would invalidate a view)."""
+        return {k: v[:n].copy() for k, v in self._cols.items()}
+
     def compact(self, keep: np.ndarray) -> None:
         """Drop rows where ``keep`` is False (in place, order-preserving)."""
         kept = int(np.count_nonzero(keep))
@@ -95,6 +102,16 @@ class _ColumnStore:
 
 
 class PackageScheduler:
+
+    # Pool state is guarded by the data lock ``_lock`` (held briefly:
+    # appends, snapshots, compaction).  Ticks serialize on ``_tick_lock``
+    # — one admission solve at a time, rng confined to the ticking
+    # thread — while submits stay concurrent.  Lock order: _tick_lock
+    # may take _lock; never the reverse.
+    __guarded_by__ = {"queue": "_lock", "_store": "_lock",
+                      "_admitted_total": "_lock", "last_report": "_lock",
+                      "rng": "_tick_lock"}
+
     def __init__(self, cfg, *, hbm_budget_bytes: float,
                  flop_budget: float, max_batch: int = 64, seed: int = 0,
                  time_limit_s: float = 5.0, wave_width: int = 8):
@@ -109,11 +126,14 @@ class PackageScheduler:
         self._store = _ColumnStore()
         self._admitted_total = 0
         self.last_report: Optional[SolveReport] = None
+        self._lock = threading.Lock()
+        self._tick_lock = threading.Lock()
 
     def submit(self, req: Request):
-        self.queue.append(req)
-        self._store.append(req.priority, req.kv_bytes(self.cfg),
-                           req.prefill_flops(self.cfg))
+        with self._lock:
+            self.queue.append(req)
+            self._store.append(req.priority, req.kv_bytes(self.cfg),
+                               req.prefill_flops(self.cfg))
 
     def tick(self) -> List[Request]:
         """Admit the optimal batch; admitted requests leave the queue.
@@ -121,46 +141,68 @@ class PackageScheduler:
         Never raises and never hangs: the solve runs under a
         ``SolveBudget`` wall-clock deadline and any unexpected exception
         is contained into an ERROR report (empty admission).
+
+        Thread-safety: the tick solves over a snapshot of the first
+        ``n`` pool rows taken under the data lock, runs the solver with
+        the data lock RELEASED (submits proceed concurrently), then
+        removes the admitted prefix rows under the lock again — rows
+        appended mid-solve are simply not candidates until the next
+        tick.  ``_tick_lock`` serializes whole ticks.
         """
-        if not self.queue:
-            return []
-        query = PackageQuery(
-            "priority", maximize=True,
-            constraints=(
-                Constraint(None, 0, self.max_batch),
-                Constraint("kv_bytes", hi=self.hbm_budget),
-                Constraint("prefill_flops", hi=self.flop_budget),
-            ))
-        budget = SolveBudget(deadline_s=self.time_limit_s).start()
-        report = SolveReport(budget=budget, monitor=NumericalMonitor())
-        try:
-            res = dual_reducer(query, self._store.view(),
-                               np.arange(len(self.queue)),
-                               q=min(500, len(self.queue)), rng=self.rng,
-                               budget=budget, report=report,
-                               ilp_kwargs=dict(
-                                   max_nodes=200,
-                                   wave_width=self.wave_width))
-        # repro: allow[REPRO004] containment rung by design: the tick
-        # contract is "never raises" — failures become an ERROR report
-        except Exception as exc:   # pragma: no cover - containment rung
-            report.status = ERROR
-            report.note(f"scheduler tick contained: {type(exc).__name__}: "
-                        f"{exc}")
-            self.last_report = report
-            return []
-        self.last_report = report.finalize(res.feasible)
-        if not res.feasible:
-            return []   # nothing admissible this tick
-        take = set(int(i) for i in res.idx)
-        keep = np.ones(len(self.queue), bool)
-        keep[list(take)] = False
-        admitted = [r for i, r in enumerate(self.queue) if i in take]
-        self.queue = [r for i, r in enumerate(self.queue) if i not in take]
-        self._store.compact(keep)
-        self._admitted_total += len(admitted)
-        return admitted
+        with self._tick_lock:
+            with self._lock:
+                n = len(self.queue)
+                if n == 0:
+                    return []
+                cols = self._store.snapshot(n)
+            query = PackageQuery(
+                "priority", maximize=True,
+                constraints=(
+                    Constraint(None, 0, self.max_batch),
+                    Constraint("kv_bytes", hi=self.hbm_budget),
+                    Constraint("prefill_flops", hi=self.flop_budget),
+                ))
+            budget = SolveBudget(deadline_s=self.time_limit_s).start()
+            report = SolveReport(budget=budget, monitor=NumericalMonitor())
+            # The admission solve holds only _tick_lock (the
+            # whole-operation serializer), never the data lock — the
+            # REPRO011 no-dispatch-under-a-data-lock discipline.
+            try:
+                # repro: allow[REPRO011] tick-exclusivity lock by
+                # design: _tick_lock serializes whole admission solves
+                # (rng confinement); the data lock _lock is NOT held
+                res = dual_reducer(query, cols, np.arange(n),
+                                   q=min(500, n), rng=self.rng,
+                                   budget=budget, report=report,
+                                   ilp_kwargs=dict(
+                                       max_nodes=200,
+                                       wave_width=self.wave_width))
+            # repro: allow[REPRO004] containment rung by design: the tick
+            # contract is "never raises" — failures become an ERROR report
+            except Exception as exc:   # pragma: no cover - containment
+                report.status = ERROR
+                report.note(f"scheduler tick contained: "
+                            f"{type(exc).__name__}: {exc}")
+                with self._lock:
+                    self.last_report = report
+                return []
+            with self._lock:
+                self.last_report = report.finalize(res.feasible)
+                if not res.feasible:
+                    return []   # nothing admissible this tick
+                take = set(int(i) for i in res.idx)
+                # the pool may have grown mid-solve: rows >= n are kept
+                keep = np.ones(len(self.queue), bool)
+                keep[list(take)] = False
+                admitted = [r for i, r in enumerate(self.queue)
+                            if i in take]
+                self.queue = [r for i, r in enumerate(self.queue)
+                              if i not in take]
+                self._store.compact(keep)
+                self._admitted_total += len(admitted)
+            return admitted
 
     @property
     def admitted_total(self) -> int:
-        return self._admitted_total
+        with self._lock:
+            return self._admitted_total

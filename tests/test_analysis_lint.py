@@ -1,18 +1,27 @@
 """The project lint layer: every REPRO rule fires on a seeded snippet,
 suppression comments silence them (with a justification required), the
 baseline ratchet admits the pinned debt and nothing else at repo head,
-and the CLI exits non-zero per seeded rule."""
+and the CLI exits non-zero per seeded rule.  The concurrency pass
+(REPRO008-012) rides the same machinery and is tested through the same
+parametrizations."""
 import json
 import os
 
 import pytest
 
-from repro.analysis.lint import (DEFAULT_LINT_DIRS, RULES, lint_paths,
+from repro.analysis.concurrency import (ALL_RULES, check_paths,
+                                        check_source)
+from repro.analysis.lint import (DEFAULT_LINT_DIRS, lint_paths,
                                  lint_source)
 from repro.analysis.report import (compare_baseline, count_by_key,
                                    load_baseline)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def scan_source(src, path="snippet.py"):
+    """Both AST passes over one source string (lint + concurrency)."""
+    return lint_source(src, path) + check_source(src, path)
 
 SNIPPETS = {
     "REPRO001": """\
@@ -64,20 +73,69 @@ def f(qcache, key):
     except Exception:
         pass
 """,
+    "REPRO008": """\
+import threading
+class Registry:
+    __guarded_by__ = {"entries": "_lock"}
+    def __init__(self):
+        self.entries = {}
+        self._lock = threading.Lock()
+    def put(self, k, v):
+        self.entries[k] = v
+""",
+    "REPRO009": """\
+import threading
+class Cache:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache = {}
+    def get_or_add(self, k, factory):
+        with self._lock:
+            if k in self._cache:
+                return self._cache[k]
+        v = factory()
+        with self._lock:
+            self._cache[k] = v
+        return v
+""",
+    "REPRO010": """\
+import threading
+_CACHE = {}
+_LOCK = threading.Lock()
+def put(k, v):
+    _CACHE[k] = v
+""",
+    "REPRO011": """\
+import threading
+_LOCK = threading.Lock()
+def solve(c, A):
+    with _LOCK:
+        return solve_lp_batch(c, A)
+""",
+    "REPRO012": """\
+import threading
+class Cache:
+    def __init__(self):
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+    def hit_and_miss(self):
+        self.stats.hits += 1
+        self.stats.misses += 1
+""",
 }
 
 
 @pytest.mark.parametrize("rule", sorted(SNIPPETS))
 def test_rule_fires_on_seeded_snippet(rule):
-    vs = lint_source(SNIPPETS[rule], "snippet.py")
+    vs = scan_source(SNIPPETS[rule])
     assert any(v.rule == rule for v in vs), \
-        f"{rule} ({RULES[rule]}) did not fire"
+        f"{rule} ({ALL_RULES[rule]}) did not fire"
     assert all(v.path == "snippet.py" and v.line > 0 for v in vs)
 
 
 @pytest.mark.parametrize("rule", sorted(SNIPPETS))
 def test_suppression_comment_silences_rule(rule):
-    vs = lint_source(SNIPPETS[rule], "snippet.py")
+    vs = scan_source(SNIPPETS[rule])
     lines = SNIPPETS[rule].splitlines()
     for line_no in sorted({v.line for v in vs if v.rule == rule},
                           reverse=True):
@@ -85,7 +143,7 @@ def test_suppression_comment_silences_rule(rule):
                                     - len(lines[line_no - 1].lstrip())]
         lines.insert(line_no - 1,
                      f"{indent}# repro: allow[{rule}] tested escape hatch")
-    vs2 = lint_source("\n".join(lines) + "\n", "snippet.py")
+    vs2 = scan_source("\n".join(lines) + "\n")
     assert not any(v.rule == rule for v in vs2)
 
 
@@ -127,6 +185,32 @@ def test_repo_head_is_clean_against_baseline():
     assert new == [], "new violations:\n" + "\n".join(
         v.format() for v in new)
     assert stale == [], f"stale baseline pins: {stale}"
+
+
+def test_repo_head_has_zero_concurrency_debt():
+    """The serving path carries ZERO unsuppressed REPRO008-012 — the
+    concurrency contracts hold with no pinned debt at all."""
+    vs, n_files = check_paths(DEFAULT_LINT_DIRS, root=ROOT)
+    assert n_files > 50
+    assert vs == [], "concurrency violations:\n" + "\n".join(
+        v.format() for v in vs)
+
+
+def test_audited_files_detectably_in_scope():
+    """The clean bill of health above is from real detection, not a
+    scoping hole: stripping the suppression markers re-fires the rules
+    at the two by-design sites (claim-token cache, tick-exclusivity
+    dispatch)."""
+    expected = {
+        "src/repro/core/distributed.py": "REPRO009",
+        "src/repro/serving/scheduler.py": "REPRO011",
+    }
+    for rel, rule in expected.items():
+        with open(os.path.join(ROOT, rel)) as f:
+            src = f.read().replace("repro: allow", "repro: unallow")
+        vs = check_source(src, rel)
+        assert any(v.rule == rule for v in vs), \
+            f"{rule} no longer detected in {rel} without its suppression"
 
 
 def test_baseline_ratchet_counts():

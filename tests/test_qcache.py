@@ -293,10 +293,11 @@ def test_bounded_step_cache_counters():
     assert c.hits == 1 and c.misses == 4 and c.evictions == 2
     assert len(c) == 2
     assert c.stats() == {"hits": 1, "misses": 4, "evictions": 2,
-                         "size": 2, "maxsize": 2}
+                         "lookups": 5, "size": 2, "maxsize": 2}
+    assert c.hits + c.misses == c.lookups
     c.clear()
     assert len(c) == 0
     # module-level cache: bounded, stats exposed
     assert _STEP_CACHE.maxsize == STEP_CACHE_MAXSIZE == 64
     assert set(step_cache_stats()) == {"hits", "misses", "evictions",
-                                       "size", "maxsize"}
+                                       "lookups", "size", "maxsize"}
